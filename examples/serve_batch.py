@@ -1,0 +1,43 @@
+"""Serve a small model with batched requests (continuous batching).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.models.lm import RunCfg
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    arch = get_arch("qwen3-8b").reduced()
+    params = init_params(arch, jax.random.PRNGKey(0))
+    engine = ServeEngine(arch, params, RunCfg(block_q=32),
+                         max_batch=4, max_len=128)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(10):
+        plen = int(rng.integers(8, 64))
+        engine.submit(rng.integers(0, arch.vocab_size, (plen,)),
+                      max_new_tokens=12,
+                      temperature=0.0 if i % 2 == 0 else 0.8)
+    done = engine.run_until_idle()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s")
+    ttfts = [(r.t_first - r.t_submit) * 1e3 for r in done]
+    print(f"ttft p50={np.percentile(ttfts, 50):.0f}ms "
+          f"p95={np.percentile(ttfts, 95):.0f}ms")
+    for r in done[:4]:
+        print(f"  rid={r.rid:2d} prompt={len(r.prompt):3d} tok "
+              f"-> {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Generate the EXPERIMENTS.md tables from results/dryrun/*.json.
+
+Run:  PYTHONPATH=src python -m repro.analysis.report
+Emits markdown to stdout (pasted/regenerated into EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "hubert-xlarge", "qwen2-vl-72b", "mamba2-2.7b", "granite-moe-1b-a400m",
+    "llama4-maverick-400b-a17b", "qwen3-8b", "deepseek-7b",
+    "deepseek-coder-33b", "minitron-8b", "hymba-1.5b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    sfx = f"@{tag}" if tag else ""
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            f = RESULTS / f"{a}@{s}@{mesh}{sfx}.json"
+            if f.exists():
+                out[(a, s)] = json.loads(f.read_text())
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    data = load(mesh)
+    lines = [
+        f"| arch | shape | kind | compile s | bytes/dev GiB | HLO PFLOPs/dev "
+        f"| coll GB/dev | dominant collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s), d in data.items():
+        if not d.get("runnable", True):
+            lines.append(f"| {a} | {s} | — | — | — | — | — | "
+                         f"skipped: {d['skip_reason']} |")
+            continue
+        r = d["roofline"]
+        kinds = sorted(r["collective_by_kind"].items(),
+                       key=lambda kv: -kv[1])[:2]
+        kstr = ", ".join(f"{k} {v/1e9:.1f}GB" for k, v in kinds)
+        lines.append(
+            f"| {a} | {s} | {d['kind']} | {d['compile_s']:.1f} "
+            f"| {fmt_bytes(d['memory_analysis']['peak_estimate_per_device'])} "
+            f"| {r['hlo_flops']/1e15:.3f} "
+            f"| {r['collective_bytes']/1e9:.1f} | {kstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "16x16", tag: str = "") -> str:
+    data = load(mesh, tag)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| model TFLOP/dev | useful | MFU (max-term) | fit (≤16 GiB)* |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s), d in data.items():
+        if not d.get("runnable", True):
+            lines.append(f"| {a} | {s} | — | — | — | skipped | — | — | — | — |")
+            continue
+        r = d["roofline"]
+        mem = d["memory_analysis"]["peak_estimate_per_device"]
+        fit = "yes" if mem <= 16 * 2**30 else f"NO ({mem/2**30:.0f}G)"
+        lines.append(
+            f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['model_flops']/1e12:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['mfu']:.3f} | {fit} |")
+    return "\n".join(lines)
+
+
+def compare_table(mesh: str = "16x16") -> str:
+    """Baseline (paper-faithful planner, *@base) vs final planner."""
+    base = load(mesh, "base")
+    final = load(mesh)
+    lines = [
+        "| arch | shape | base bottleneck | base MFU | final bottleneck "
+        "| final MFU | step time: base -> final |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in final:
+        if key not in base:
+            continue
+        b, f = base[key], final[key]
+        if not f.get("runnable", True) or "roofline" not in f \
+                or "roofline" not in b:
+            continue
+        rb, rf = b["roofline"], f["roofline"]
+        lines.append(
+            f"| {key[0]} | {key[1]} | {rb['bottleneck']} | {rb['mfu']:.3f} "
+            f"| {rf['bottleneck']} | {rf['mfu']:.3f} "
+            f"| {rb['step_time_s']*1e3:.1f} -> {rf['step_time_s']*1e3:.1f} ms |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print("## Dry-run 16x16 (single pod, 256 chips)\n")
+    print(dryrun_table("16x16"))
+    print("\n## Dry-run 2x16x16 (two pods, 512 chips)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table("16x16"))
+    print("\n## Baseline (paper-faithful) vs final planner\n")
+    print(compare_table("16x16"))
+
+
+if __name__ == "__main__":
+    main()

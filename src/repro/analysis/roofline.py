@@ -1,0 +1,131 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM_bw)
+    collective term = coll_bytes  / (chips x link_bw)
+
+FLOPs/bytes come from the trip-count-corrected HLO walk
+(:mod:`repro.analysis.hlo_stats`), cross-checked against
+``compiled.cost_analysis()`` (which undercounts loop bodies); collective
+bytes are parsed from the HLO (they are absent from cost_analysis).
+
+All quantities in this module are PER-DEVICE (the compiled module is the
+SPMD per-device program), so "/(chips x ...)" is already folded in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.analysis.hlo_stats import parse_hlo
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.hw.tpu import TpuTarget, get_target
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str                     # train | decode | prefill | forward
+    # per-device quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_bytes_dcn: float
+    collective_by_kind: Dict[str, float]
+    # raw cost_analysis (uncorrected; for the cross-check column)
+    xla_flops_raw: float
+    xla_bytes_raw: float
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # model-level
+    model_flops: float            # 6*N*D (dense) / 6*N_active*D per device
+    useful_ratio: float           # model_flops / hlo_flops
+    bottleneck: str
+    step_time_s: float            # max of terms (perfect overlap)
+    mfu: float                    # model_flops / (step_time * peak)
+    memory_per_device_bytes: float
+    notes: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops_per_step(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N·D with N = active params (MoE) and D = tokens this step.
+
+    Training counts fwd+bwd (6ND); inference counts forward only (2ND).
+    """
+    n = arch.active_param_count()
+    toks = shape.tokens
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * toks
+
+
+def analyze(
+    *,
+    arch: ArchConfig,
+    shape: ShapeConfig,
+    kind: str,
+    hlo_text: str,
+    n_devices: int,
+    cost_analysis: Optional[Dict[str, float]] = None,
+    memory_stats: Optional[Any] = None,
+    mesh_desc: str = "",
+    target: str | TpuTarget = "tpu-v5e",
+) -> RooflineReport:
+    tgt = target if isinstance(target, TpuTarget) else get_target(target)
+    stats = parse_hlo(hlo_text, n_devices)
+    ca = cost_analysis or {}
+
+    flops = stats["flops"]
+    hbm = stats["hbm_bytes"]
+    coll = stats["collective_bytes"]
+    coll_dcn = stats["collective_bytes_dcn"]
+
+    compute_s = flops / tgt.peak_bf16_flops
+    memory_s = hbm / tgt.hbm_bw
+    # DCN-crossing bytes ride the slow channel
+    collective_s = (coll - coll_dcn) / tgt.ici_link_bw + coll_dcn / tgt.dcn_bw
+
+    mf = model_flops_per_step(arch, shape) / n_devices
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    mfu = mf / (step * tgt.peak_bf16_flops) if step > 0 else 0.0
+
+    mem_bytes = 0.0
+    if memory_stats is not None:
+        mem_bytes = (memory_stats.argument_size_in_bytes
+                     + memory_stats.output_size_in_bytes
+                     + memory_stats.temp_size_in_bytes
+                     - memory_stats.alias_size_in_bytes)
+
+    return RooflineReport(
+        arch=arch.name,
+        shape=shape.name,
+        mesh=mesh_desc,
+        kind=kind,
+        hlo_flops=flops,
+        hlo_bytes=hbm,
+        collective_bytes=coll,
+        collective_bytes_dcn=coll_dcn,
+        collective_by_kind=stats["collective_by_kind"],
+        xla_flops_raw=float(ca.get("flops", 0.0)),
+        xla_bytes_raw=float(ca.get("bytes accessed", 0.0)),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        bottleneck=bottleneck,
+        step_time_s=step,
+        mfu=mfu,
+        memory_per_device_bytes=mem_bytes,
+    )

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpointer import Checkpointer
+__all__ = ["Checkpointer"]

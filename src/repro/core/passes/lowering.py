@@ -1,0 +1,330 @@
+"""Lowering pass — the paper's "HLS" phase (§4, final level).
+
+"With our approach, the accelerator is designed only at the end of the
+flow according to the resulting memory organization. [...] The
+accelerator is mostly unaware of the data organization and layout since
+the IR has been already updated."
+
+Here the accelerator logic is the XLA-compiled step function.  This pass
+consumes ONLY the :class:`MemoryPlan` (+ arch/shape configs) and emits:
+
+* ``train_step(state, batch)``  — fwd + bwd + AdamW, microbatched,
+  donated, remat-policied, gradient-compressed — all per the plan;
+* ``serve_step(state, batch)``  — one decode step against the session
+  cache (or an encoder/prefill forward for non-decoding shapes);
+
+together with input ShapeDtypeStructs and NamedShardings, ready for
+``jax.jit(...).lower(...).compile()`` (the dry-run) or execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_arch, get_shape
+from repro.core.plan import MemoryPlan
+from repro.dist.collectives import ef_compress, ef_state
+from repro.dist.sharding import (
+    cache_pspecs,
+    mesh_sizes,
+    resolve_pspec,
+    tree_shardings,
+)
+from repro.models import frontends
+from repro.models import lm
+from repro.models.lm import RunCfg
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class LoweredStep:
+    kind: str                    # "train" | "decode" | "forward"
+    fn: Callable                 # NOT yet jitted
+    in_shapes: Tuple[Any, ...]   # ShapeDtypeStruct pytrees (state, batch)
+    in_pspecs: Tuple[Any, ...]
+    out_pspecs: Any
+    donate_argnums: Tuple[int, ...]
+    mesh: Mesh
+    plan: MemoryPlan
+
+    def jit(self):
+        shardings_in = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.in_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        shardings_out = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.out_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(self.fn, in_shardings=shardings_in,
+                       out_shardings=shardings_out,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.in_shapes)
+
+
+def build_run_cfg(plan: MemoryPlan, arch: ArchConfig,
+                  mesh: Optional[Mesh]) -> RunCfg:
+    fa = plan.partitions.get("flash_attention")
+    ssd = plan.partitions.get("ssd_scan")
+    moe_impl = plan.estimates.get("moe_impl", "gshard_einsum")
+    data_axes = tuple(a for a in plan.mesh_axes if a != "model")
+    return RunCfg(
+        vocab_padded=int(plan.estimates.get("vocab_padded", 0)),
+        heads_padded=int(plan.estimates.get("heads_padded", 0)),
+        kv_heads_padded=int(plan.estimates.get("kv_heads_padded", 0)),
+        ssm_heads_padded=int(plan.estimates.get("ssm_heads_padded", 0)),
+        kv_heads_sharded=bool(plan.estimates.get("kv_heads_sharded", 1.0)),
+        shard_heads=plan.estimates.get("strategy", "megatron_tp")
+        == "megatron_tp",
+        batch_spec=(tuple(plan.axis_rules["batch"])
+                    if isinstance(plan.axis_rules.get("batch"), (list, tuple))
+                    else plan.axis_rules.get("batch"))
+        if str(plan.estimates.get("strategy", "")).startswith("fsdp")
+        else None,
+        block_q=fa.blocks["block_q"] if fa else 512,
+        ssd_chunk=ssd.blocks["chunk"] if ssd else 256,
+        remat=plan.comm.remat_policy,
+        moe_impl=moe_impl if isinstance(moe_impl, str) else "gshard_einsum",
+        decode_impl=str(plan.estimates.get("decode_impl", "xla")),
+        mesh=mesh,
+        data_axes=data_axes,
+        model_axis="model",
+    )
+
+
+def _padded(plan: MemoryPlan):
+    return (int(plan.estimates.get("vocab_padded", 0)),
+            int(plan.estimates.get("heads_padded", 0)),
+            int(plan.estimates.get("ssm_heads_padded", 0)),
+            int(plan.estimates.get("kv_heads_padded", 0)))
+
+
+def _param_pspecs(plan: MemoryPlan, arch: ArchConfig, sizes) -> Any:
+    axes = lm.param_axes(arch, *_padded(plan))
+    shapes = lm.param_shapes(arch, *_padded(plan))
+    return jax.tree.map(
+        lambda ax, sds: resolve_pspec(plan.axis_rules, sds.shape, ax, sizes),
+        axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _input_pspecs(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
+                  specs, sizes) -> Dict[str, P]:
+    axes = frontends.input_axes(arch, shape)
+    return {k: resolve_pspec(plan.axis_rules, specs[k].shape, axes[k], sizes)
+            for k in specs}
+
+
+# =====================================================================
+# train step
+# =====================================================================
+
+def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
+                     mesh: Mesh,
+                     opt_cfg: Optional[adamw.OptConfig] = None) -> LoweredStep:
+    sizes = mesh_sizes(mesh)
+    cfg = build_run_cfg(plan, arch, mesh)
+    opt_cfg = opt_cfg or adamw.OptConfig.from_plan(plan)
+    nmicro = max(plan.comm.microbatches, 1)
+    compress = plan.comm.compress_pod_grads
+
+    pshapes = lm.param_shapes(arch, *_padded(plan))
+    ppspecs = _param_pspecs(plan, arch, sizes)
+
+    ishapes = frontends.input_specs(arch, shape)
+    ipspecs = _input_pspecs(plan, arch, shape, ishapes, sizes)
+
+    mdt = jnp.dtype(plan.opt["moment_dtype"])
+    opt_shapes: Dict[str, Any] = {
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), pshapes),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), pshapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    opt_pspecs: Dict[str, Any] = {"m": ppspecs, "v": ppspecs, "step": P()}
+    if plan.opt["master_weights"]:
+        opt_shapes["master"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes)
+        opt_pspecs["master"] = ppspecs
+    if compress:
+        opt_shapes["ef"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), pshapes)
+        opt_pspecs["ef"] = ppspecs
+
+    state_shapes = {"params": pshapes, "opt": opt_shapes}
+    state_pspecs = {"params": ppspecs, "opt": opt_pspecs}
+
+    def loss_fn(params, batch):
+        loss, metrics = lm.train_loss(arch, params, batch, cfg)
+        return loss, metrics
+
+    # which dim of each input is the batch dim (positions: (3,B,S) -> 1)
+    batch_dims = {k: (ax.index("batch") if "batch" in ax else None)
+                  for k, ax in frontends.input_axes(arch, shape).items()}
+
+    def train_step(state, batch):
+        params = state["params"]
+        if nmicro > 1:
+            # grad accumulation: scan over a leading microbatch axis.
+            # Splitting the batch dim by reshape (B -> nmicro x B/nmicro)
+            # keeps the data sharding on the inner dim; a dynamic-slice on
+            # the sharded dim would force GSPMD to replicate the batch.
+            def split(x, bd):
+                if bd is None:
+                    return None
+                x = jnp.moveaxis(x, bd, 0)
+                # (B, ...) -> (B/nm, nm, ...) -> (nm, B/nm, ...): the batch
+                # dim splits on the *inner* position so its data-sharding
+                # survives the reshape (interleaved micro assignment)
+                x = x.reshape(x.shape[0] // nmicro, nmicro, *x.shape[1:])
+                x = jnp.moveaxis(x, 1, 0)
+                return jnp.moveaxis(x, 1, bd + 1)
+            mbs = {k: split(x, batch_dims[k]) for k, x in batch.items()}
+
+            def micro(carry, mb_sliced):
+                gsum, lsum = carry
+                mb = {k: (mb_sliced[k] if batch_dims[k] is not None
+                          else batch[k]) for k in batch}
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+            zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params), jnp.zeros((), jnp.float32))
+            (grads, lsum), _ = jax.lax.scan(
+                micro, zero, {k: v for k, v in mbs.items() if v is not None})
+            grads = jax.tree.map(lambda g: g / nmicro, grads)
+            loss = lsum / nmicro
+            metrics = {"ce_loss": loss, "aux_loss": jnp.zeros(()),
+                       "tokens": jnp.asarray(shape.tokens, jnp.float32)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        opt_state = dict(state["opt"])
+        if compress:
+            ef = opt_state.pop("ef")
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(ef)
+            out_g, out_e = [], []
+            for g, e in zip(flat_g, flat_e):
+                gh, eh = ef_compress(g, e)
+                out_g.append(gh)
+                out_e.append(eh)
+            grads = jax.tree.unflatten(tdef, out_g)
+            new_ef = jax.tree.unflatten(tdef, out_e)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        if compress:
+            opt_state["ef"] = new_ef
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return {"params": params, "opt": opt_state}, metrics
+
+    return LoweredStep(
+        kind="train",
+        fn=train_step,
+        in_shapes=(state_shapes, ishapes),
+        in_pspecs=(state_pspecs, ipspecs),
+        out_pspecs=(state_pspecs,
+                    jax.tree.map(lambda _: P(),
+                                 {"ce_loss": 0, "aux_loss": 0, "tokens": 0,
+                                  "grad_norm": 0, "lr": 0, "loss": 0})),
+        donate_argnums=(0,),
+        mesh=mesh,
+        plan=plan,
+    )
+
+
+# =====================================================================
+# serve step (decode) / forward (prefill & encoder)
+# =====================================================================
+
+def lower_serve_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
+                     mesh: Mesh) -> LoweredStep:
+    sizes = mesh_sizes(mesh)
+    cfg = build_run_cfg(plan, arch, mesh)
+    pshapes = lm.param_shapes(arch, *_padded(plan))
+    ppspecs = _param_pspecs(plan, arch, sizes)
+    ishapes = frontends.input_specs(arch, shape)
+    ipspecs = _input_pspecs(plan, arch, shape, ishapes, sizes)
+
+    B = shape.global_batch
+    Vp = int(plan.estimates.get("vocab_padded", 0)) or arch.vocab_size
+    logits_spec = resolve_pspec(plan.axis_rules, (B, Vp),
+                                ("batch", "vocab"), sizes)
+
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: lm.init_cache(arch, shape.global_batch, shape.seq_len,
+                                  ssm_heads=cfg.ssm_heads_padded,
+                                  kv_heads=cfg.kv_heads_padded))
+        cpspecs = cache_pspecs(plan, arch, cache_shapes, sizes)
+
+        def serve_step(params, cache, batch):
+            logits, new_cache = lm.decode_step(arch, params, cache, batch, cfg)
+            return logits, new_cache
+
+        return LoweredStep(
+            kind="decode",
+            fn=serve_step,
+            in_shapes=(pshapes, cache_shapes, ishapes),
+            in_pspecs=(ppspecs, cpspecs, ipspecs),
+            out_pspecs=(logits_spec, cpspecs),
+            donate_argnums=(1,),
+            mesh=mesh,
+            plan=plan,
+        )
+
+    if arch.is_encoder:
+        # encoder "prefill" = full-sequence forward (no cache exists)
+        def fwd_step(params, batch):
+            x, _ = lm.forward(arch, params, batch, cfg)
+            return lm._logits(arch, params, x, cfg)
+
+        out_spec = resolve_pspec(plan.axis_rules, (B, shape.seq_len, Vp),
+                                 ("batch", "seq", "vocab"), sizes)
+        return LoweredStep(
+            kind="forward",
+            fn=fwd_step,
+            in_shapes=(pshapes, ishapes),
+            in_pspecs=(ppspecs, ipspecs),
+            out_pspecs=out_spec,
+            donate_argnums=(),
+            mesh=mesh,
+            plan=plan,
+        )
+
+    # decoder prefill: build the session cache + last-token logits
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(arch, B, shape.seq_len,
+                              ssm_heads=cfg.ssm_heads_padded,
+                              kv_heads=cfg.kv_heads_padded))
+    cpspecs = cache_pspecs(plan, arch, cache_shapes, sizes)
+
+    def prefill_step(params, batch):
+        return lm.prefill(arch, params, batch, cfg, max_len=shape.seq_len)
+
+    return LoweredStep(
+        kind="prefill",
+        fn=prefill_step,
+        in_shapes=(pshapes, ishapes),
+        in_pspecs=(ppspecs, ipspecs),
+        out_pspecs=(logits_spec, cpspecs),
+        donate_argnums=(),
+        mesh=mesh,
+        plan=plan,
+    )
+
+
+def lower_step(plan: MemoryPlan, mesh: Mesh,
+               opt_cfg: Optional[adamw.OptConfig] = None) -> LoweredStep:
+    """Dispatch on the shape kind (the dry-run entry point)."""
+    arch = get_arch(plan.arch)
+    shape = get_shape(plan.shape)
+    if shape.kind == "train":
+        return lower_train_step(plan, arch, shape, mesh, opt_cfg)
+    return lower_serve_step(plan, arch, shape, mesh)

@@ -1,0 +1,63 @@
+"""PassPipeline — the multi-level compilation flow (paper Figure 1).
+
+``specialize()`` is the public entry point: it builds the Memory IR for an
+(arch × shape), instantiates the generic template, runs the passes in the
+paper's order, and returns the fully-refined :class:`MemoryPlan`.
+
+The final phase — lowering to an executable step ("HLS" in the paper) —
+lives in :mod:`repro.core.passes.lowering` and consumes only the plan.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Tuple, Type
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_arch, get_shape
+from repro.core.costmodel import MeshModel
+from repro.core.describe import describe_program
+from repro.core.ir import ProgramIR
+from repro.core.passes import DEFAULT_PASSES, Pass, PassContext
+from repro.core.plan import MemoryPlan
+from repro.core.template import MemoryTemplate
+
+
+class PassPipeline:
+    def __init__(self, passes: Sequence[Type[Pass]] = DEFAULT_PASSES):
+        self.passes = [p() for p in passes]
+
+    def run(self, ctx: PassContext) -> MemoryPlan:
+        for p in self.passes:
+            p.run(ctx)
+            ctx.ir.phase = p.name
+        ctx.plan.template_summary = ctx.template.summary()
+        return ctx.plan
+
+
+def specialize(
+    arch: str | ArchConfig,
+    shape: str | ShapeConfig,
+    mesh_axes: Tuple[str, ...] = ("data", "model"),
+    mesh_shape: Tuple[int, ...] = (16, 16),
+    target: str = "tpu-v5e",
+    passes: Optional[Sequence[Type[Pass]]] = None,
+    use_pallas: str = "auto",
+    **options,
+) -> MemoryPlan:
+    """Run the full specialization flow; returns the MemoryPlan."""
+    arch_cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shape_cfg = get_shape(shape) if isinstance(shape, str) else shape
+    ir = describe_program(arch_cfg, shape_cfg)
+    mesh = MeshModel(axes=tuple(mesh_axes), shape=tuple(mesh_shape))
+    template = MemoryTemplate.default(target)
+    plan = MemoryPlan(
+        arch=arch_cfg.name,
+        shape=shape_cfg.name,
+        mesh_axes=tuple(mesh_axes),
+        mesh_shape=tuple(mesh_shape),
+        target=target,
+        use_pallas=use_pallas,
+    )
+    ctx = PassContext(arch=arch_cfg, shape=shape_cfg, ir=ir, mesh=mesh,
+                      template=template, plan=plan, options=dict(options))
+    pipeline = PassPipeline(passes if passes is not None else DEFAULT_PASSES)
+    return pipeline.run(ctx)

@@ -1,0 +1,154 @@
+"""MemoryPlan — the specialized template instance the flow produces.
+
+Paper §4: each phase progressively refines the template; the *result* of
+the whole flow is a fully-parameterized memory architecture plus a
+rewritten IR.  Here the result is a :class:`MemoryPlan`:
+
+* per-tensor :class:`Placement` (residency + mesh sharding + layout),
+* a :class:`CommPlan` (collective schedule, prefetch, compression),
+* per-kernel :class:`BlockPlan` (Pallas BlockSpec tiles = PLM banks),
+* the refined :class:`~repro.core.template.MemoryTemplate` summary,
+* a decision log (pass → decision → reason) for ablation/inspection.
+
+The plan is JSON-serializable: it is the artifact a deployment would ship
+next to the model config, and the lowering pass consumes *only* the plan
+(the model code never sees the passes — the paper's "accelerator is mostly
+unaware of the data organization").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.ir import MemorySpace
+
+
+AxisAssign = Tuple[Optional[Any], ...]  # per-dim: mesh axis name, tuple, or None
+
+
+@dataclasses.dataclass
+class Placement:
+    """Where one logical tensor lives (data-organization + layout output)."""
+
+    residency: str = MemorySpace.HBM.value
+    # one entry per tensor dim: None | "data" | "model" | ("pod","data") ...
+    spec: AxisAssign = ()
+    dtype: Optional[str] = None          # layout pass may override (bf16/f32)
+    pad_to: Optional[Tuple[int, ...]] = None  # MXU-alignment padding
+    layout: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    decided_by: List[str] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CommPlan:
+    """Communication-phase output (prefetcher + channel configuration)."""
+
+    grad_schedule: str = "reduce_scatter"     # or "all_reduce"
+    compress_pod_grads: bool = False          # int8+error-feedback on DCN axis
+    compress_bits: int = 8
+    microbatches: int = 1                     # grad-accum for comm overlap
+    prefetch_depth: int = 2                   # host input pipeline depth
+    overlap_collectives: bool = True          # async collective scheduling
+    remat_policy: str = "none"                # none|dots|full
+    donate_state: bool = True                 # buffer sharing (disjoint lifetimes)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class BlockPlan:
+    """Local-partitioning output for one kernel (multi-bank PLM config)."""
+
+    kernel: str                                # "flash_attention" | ...
+    blocks: Dict[str, int] = dataclasses.field(default_factory=dict)
+    n_buffers: int = 2                         # banking degree
+    vmem_bytes: int = 0                        # modeled working set
+    grid_note: str = ""
+
+
+@dataclasses.dataclass
+class MemoryPlan:
+    """The fully-specialized memory architecture for (arch × shape × mesh)."""
+
+    arch: str
+    shape: str
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Tuple[int, ...]
+    target: str = "tpu-v5e"
+
+    # logical-axis -> mesh-axis rules (data organization output)
+    axis_rules: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    placements: Dict[str, Placement] = dataclasses.field(default_factory=dict)
+    comm: CommPlan = dataclasses.field(default_factory=CommPlan)
+    partitions: Dict[str, BlockPlan] = dataclasses.field(default_factory=dict)
+    template_summary: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    use_pallas: str = "auto"                   # auto|on|off
+    estimates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # optimizer-state "technology" decisions (data-organization ladder)
+    opt: Dict[str, Any] = dataclasses.field(
+        default_factory=lambda: {"moment_dtype": "float32", "master_weights": True})
+
+    # decision log: (pass, subject, decision, reason)
+    log: List[Tuple[str, str, str, str]] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    def record(self, pass_name: str, subject: str, decision: str, reason: str) -> None:
+        self.log.append((pass_name, subject, decision, reason))
+
+    def placement(self, name: str) -> Placement:
+        if name not in self.placements:
+            self.placements[name] = Placement()
+        return self.placements[name]
+
+    def sharding_spec(self, logical_axes: Sequence[Optional[str]]) -> AxisAssign:
+        """Resolve logical axes through the plan's axis rules."""
+        out = []
+        used: set = set()
+        for ax in logical_axes:
+            assign = self.axis_rules.get(ax) if ax is not None else None
+            if assign is None:
+                out.append(None)
+                continue
+            names = (assign,) if isinstance(assign, str) else tuple(assign)
+            names = tuple(n for n in names if n not in used)
+            used.update(names)
+            if not names:
+                out.append(None)
+            elif len(names) == 1:
+                out.append(names[0])
+            else:
+                out.append(names)
+        return tuple(out)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, indent=2, default=str)
+
+    @classmethod
+    def from_json(cls, s: str) -> "MemoryPlan":
+        d = json.loads(s)
+        d["placements"] = {
+            k: Placement(**{**v, "spec": _untuple(v["spec"])})
+            for k, v in d["placements"].items()
+        }
+        d["comm"] = CommPlan(**d["comm"])
+        d["partitions"] = {k: BlockPlan(**v) for k, v in d["partitions"].items()}
+        d["mesh_axes"] = tuple(d["mesh_axes"])
+        d["mesh_shape"] = tuple(d["mesh_shape"])
+        d["log"] = [tuple(x) for x in d["log"]]
+        return cls(**d)
+
+
+def _untuple(spec: Any) -> AxisAssign:
+    out = []
+    for s in spec:
+        if isinstance(s, list):
+            out.append(tuple(s))
+        else:
+            out.append(s)
+    return tuple(out)

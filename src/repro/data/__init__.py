@@ -1,0 +1,2 @@
+from repro.data.pipeline import PrefetchPipeline, SyntheticSource
+__all__ = ["PrefetchPipeline", "SyntheticSource"]

@@ -1,0 +1,100 @@
+"""Host data pipeline with prefetch (the template's ``prefetch.host``).
+
+Production shape: a background thread keeps ``prefetch_depth`` batches
+ahead (depth set by the communication pass), each host producing only its
+shard of the global batch.  The source here is a deterministic synthetic
+token stream (seeded per (host, step) so restarts reproduce bit-exactly —
+required for checkpoint/restart tests); a real deployment swaps
+``SyntheticSource`` for a storage-backed source with the same interface.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+class SyntheticSource:
+    """Deterministic per-(host, step) synthetic batches."""
+
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 host_id: int = 0, n_hosts: int = 1, seed: int = 0):
+        self.arch, self.shape = arch, shape
+        self.host_id, self.n_hosts = host_id, n_hosts
+        self.seed = seed
+        assert shape.global_batch % n_hosts == 0
+        self.host_batch = shape.global_batch // n_hosts
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + self.host_id)
+        B, S = self.host_batch, self.shape.seq_len
+        arch = self.arch
+        out: Dict[str, np.ndarray] = {}
+        if arch.modality in ("audio", "vlm") and self.shape.kind != "decode":
+            out["embeds"] = rng.standard_normal(
+                (B, S, arch.d_model), dtype=np.float32)
+            if arch.mrope_sections is not None:
+                pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+                out["positions"] = np.broadcast_to(pos, (3, B, S)).copy()
+            if self.shape.kind == "train":
+                out["targets"] = rng.integers(
+                    0, arch.vocab_size, (B, S), dtype=np.int32)
+            if arch.modality == "audio" and self.shape.kind == "train":
+                out["mask"] = (rng.random((B, S)) < 0.5).astype(np.float32)
+        else:
+            S_eff = 1 if self.shape.kind == "decode" else S
+            out["tokens"] = rng.integers(
+                0, arch.vocab_size, (B, S_eff), dtype=np.int32)
+            if self.shape.kind == "train":
+                out["targets"] = rng.integers(
+                    0, arch.vocab_size, (B, S), dtype=np.int32)
+        return out
+
+
+class PrefetchPipeline:
+    """Background-thread prefetcher; depth comes from the memory plan."""
+
+    def __init__(self, source: SyntheticSource, prefetch_depth: int = 2,
+                 start_step: int = 0, device_put=None):
+        self.source = source
+        self.depth = max(prefetch_depth, 1)
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._put = device_put or (lambda x: x)
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            try:
+                self._q.put((step, self._put(batch)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

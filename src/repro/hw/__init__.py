@@ -1,0 +1,3 @@
+from repro.hw.tpu import TpuTarget, get_target, KiB, MiB, GiB
+
+__all__ = ["TpuTarget", "get_target", "KiB", "MiB", "GiB"]

@@ -1,0 +1,90 @@
+"""TPU hardware target specification.
+
+The paper sizes *physical* memories for an FPGA; on TPU the memories are
+fixed, so the target spec is the set of capacities/bandwidths the passes
+budget against.  All roofline math in :mod:`repro.analysis.roofline` reads
+these numbers, so there is a single source of truth for the hardware model.
+
+Numbers for the default target (TPU v5e) follow the task specification:
+197 TFLOP/s bf16 per chip, 819 GB/s HBM bandwidth, ~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+KiB = 1024
+MiB = 1024 * KiB
+GiB = 1024 * MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuTarget:
+    """Capability/capacity model of one TPU chip + its interconnect."""
+
+    name: str = "tpu-v5e"
+    # --- compute ---
+    peak_bf16_flops: float = 197e12  # FLOP/s per chip (MXU, bf16)
+    peak_f32_flops: float = 98.5e12  # ~half rate for fp32 accumulate paths
+    mxu_dim: int = 128               # systolic array edge -> matmul tile quantum
+    vpu_lanes: Tuple[int, int] = (8, 128)  # (sublane, lane) tiling quantum
+
+    # --- memories (the "template components" with fixed size on TPU) ---
+    hbm_bytes: int = 16 * GiB
+    hbm_bw: float = 819e9            # bytes/s
+    vmem_bytes: int = 64 * MiB       # usable VMEM planning budget per core
+    smem_bytes: int = 1 * MiB        # scalar memory (for scalar prefetch)
+
+    # --- interconnect ("channels" in the paper's template) ---
+    ici_link_bw: float = 50e9        # bytes/s per ICI link, per direction
+    ici_links_per_chip: int = 4      # 2D torus on v5e: 4 links
+    dcn_bw: float = 6.25e9           # bytes/s per host NIC (pod axis, 50 Gb/s)
+
+    # --- derived helpers -------------------------------------------------
+    def matmul_time(self, flops: float, dtype_bytes: int = 2) -> float:
+        peak = self.peak_bf16_flops if dtype_bytes <= 2 else self.peak_f32_flops
+        return flops / peak
+
+    def hbm_time(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bw
+
+    def ici_time(self, nbytes: float) -> float:
+        """Time to move nbytes across one ICI link."""
+        return nbytes / self.ici_link_bw
+
+    def align_up(self, n: int, q: int | None = None) -> int:
+        q = q or self.mxu_dim
+        return ((n + q - 1) // q) * q
+
+    def vmem_fit(self, *tile_bytes: int, buffers: int = 2) -> bool:
+        """Does a working set (with ``buffers``-way banking) fit in VMEM?
+
+        ``buffers=2`` models the double-buffered pipeline (the paper's
+        multi-bank PLM: one bank is filled by DMA while the other is read
+        by the datapath).
+        """
+        return buffers * sum(tile_bytes) <= self.vmem_bytes
+
+
+# Registry so configs can say ``target="tpu-v5e"``.
+_TARGETS = {
+    "tpu-v5e": TpuTarget(),
+    "tpu-v5p": TpuTarget(
+        name="tpu-v5p",
+        peak_bf16_flops=459e12,
+        peak_f32_flops=229.5e12,
+        hbm_bytes=95 * GiB,
+        hbm_bw=2765e9,
+        ici_link_bw=100e9,
+        ici_links_per_chip=6,  # 3D torus
+        vmem_bytes=128 * MiB,
+    ),
+}
+
+
+def get_target(name: str = "tpu-v5e") -> TpuTarget:
+    try:
+        return _TARGETS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown TPU target {name!r}; have {sorted(_TARGETS)}") from e

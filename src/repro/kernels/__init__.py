@@ -1,0 +1,8 @@
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.tiled_matmul import tiled_matmul
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention", "ssd_scan",
+           "tiled_matmul"]

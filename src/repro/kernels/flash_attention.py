@@ -1,0 +1,134 @@
+"""Flash attention (forward) Pallas TPU kernel.
+
+PLM mapping (paper §3 → DESIGN.md §2): the q/k/v/o tiles are the
+multi-bank PLM; block sizes come from the local-partitioning pass
+(``plan.partitions['flash_attention']``), chosen so the double-buffered
+working set fits the VMEM budget and tile dims are MXU multiples.
+
+Grid: (batch·kv_head, q_blocks, kv_blocks) — kv innermost so the online
+softmax carry (m, l, acc) lives in VMEM scratch across kv steps.
+GQA is handled by loading q as (G·block_q, D) per kv head.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    # refs sliced by BlockSpec:
+    q_ref,        # (1, block_q, G, D)
+    k_ref,        # (1, block_kv, D)
+    v_ref,        # (1, block_kv, D)
+    o_ref,        # (1, block_q, G, D)
+    m_scr, l_scr, acc_scr,      # VMEM scratch: (block_q*G,), (block_q*G,), (block_q*G, D)
+    *,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_kv: int,
+    scale: float,
+):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+    G = q_ref.shape[2]
+    D = q_ref.shape[3]
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].reshape(block_q * G, D).astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)                      # (block_kv, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # positions: rows are (q_pos, g) pairs; cols are kv positions
+    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, G), 0).reshape(block_q * G)
+    kpos = kv_idx * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)[0]
+    mask = jnp.ones((block_q * G, block_kv), dtype=jnp.bool_)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).reshape(
+            block_q, G, D).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention(
+    q: jax.Array,              # (B, S, H, D)
+    k: jax.Array,              # (B, S, K, D)
+    v: jax.Array,              # (B, S, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    scale = D ** -0.5
+
+    # layout: fold heads into the grid; q as (B*K, S, G, D)
+    qg = q.reshape(B, S, K, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B * K, S, G, D)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+
+    grid = (B * K, S // block_q, S // block_kv)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, G, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, G, D), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, S, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G,), jnp.float32),
+            pltpu.VMEM((block_q * G,), jnp.float32),
+            pltpu.VMEM((block_q * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(B, K, S, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, D)

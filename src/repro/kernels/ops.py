@@ -1,0 +1,89 @@
+"""Jit'd kernel wrappers: the single entry point model code / serving use.
+
+Each op dispatches between the Pallas kernel (TPU, or interpret mode for
+CPU validation) and the pure-jnp oracle in :mod:`repro.kernels.ref`,
+driven by the plan's ``use_pallas`` ("auto" = kernel iff a TPU backend is
+present) and configured by the plan's BlockPlans — kernel code never
+picks its own tiles (paper §4: the template is parameterized by the
+compiler, the datapath just runs).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import BlockPlan, MemoryPlan
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+from repro.kernels.tiled_matmul import tiled_matmul as _mm_pallas
+
+
+def _use_pallas(mode: str = "auto") -> bool:
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _blocks(plan: Optional[MemoryPlan], kernel: str) -> Optional[BlockPlan]:
+    if plan is None:
+        return None
+    return plan.partitions.get(kernel)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    plan: Optional[MemoryPlan] = None, mode="auto",
+                    interpret=False):
+    bp = _blocks(plan, "flash_attention")
+    if _use_pallas(mode) or interpret:
+        return _flash_pallas(
+            q, k, v, causal=causal, window=window,
+            block_q=bp.blocks["block_q"] if bp else 512,
+            block_kv=bp.blocks["block_kv"] if bp else 1024,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k, v, *, cache_len, window=0,
+                     plan: Optional[MemoryPlan] = None, mode="auto",
+                     interpret=False):
+    bp = _blocks(plan, "decode_attention")
+    if _use_pallas(mode) or interpret:
+        return _decode_pallas(
+            q, k, v, cache_len=cache_len, window=window,
+            block_kv=bp.blocks["block_kv"] if bp else 2048,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return ref.decode_attention_ref(q, k, v, cache_len=cache_len,
+                                    window=window)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, plan: Optional[MemoryPlan] = None,
+             mode="auto", interpret=False):
+    bp = _blocks(plan, "ssd_scan")
+    if _use_pallas(mode) or interpret:
+        y = _ssd_pallas(
+            x, dt, A, Bm, Cm,
+            chunk=bp.blocks["chunk"] if bp else 256,
+            interpret=interpret or jax.default_backend() != "tpu")
+        return y
+    y, _ = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    return y
+
+
+def matmul(a, b, *, plan: Optional[MemoryPlan] = None, mode="auto",
+           interpret=False):
+    bp = _blocks(plan, "tiled_matmul")
+    if _use_pallas(mode) or interpret:
+        return _mm_pallas(
+            a, b,
+            bm=bp.blocks["bm"] if bp else 512,
+            bk=bp.blocks["bk"] if bp else 512,
+            bn=bp.blocks["bn"] if bp else 512,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return ref.tiled_matmul_ref(a, b)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<kernel>_ref`` is the semantic ground truth; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` against these.  They are also the
+lowering path the dry-run compiles (kernels target TPU; the CPU container
+validates them in interpret mode only).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,              # (B, S, H, D)
+    k: jax.Array,              # (B, S, K, D)
+    v: jax.Array,              # (B, S, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qq = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qq * (D ** -0.5),
+                   k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window and window > 0:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,              # (B, H, D)  one token
+    k: jax.Array,              # (B, S, K, D) cache
+    v: jax.Array,              # (B, S, K, D)
+    *,
+    cache_len: jax.Array,      # (B,) or scalar
+    window: int = 0,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qq = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qq * (D ** -0.5),
+                   k.astype(jnp.float32))
+    kpos = jnp.arange(S)[None, :]
+    cl = jnp.asarray(cache_len).reshape(-1, 1)
+    m = kpos < cl
+    if window and window > 0:
+        m &= (cl - 1 - kpos) < window
+    s = jnp.where(m[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,              # (B, S, H, P) fp32
+    dt: jax.Array,             # (B, S, H) fp32 (post-softplus)
+    A: jax.Array,              # (H,) fp32 negative
+    Bm: jax.Array,             # (B, S, H, N) fp32 (groups pre-broadcast)
+    Cm: jax.Array,             # (B, S, H, N)
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential recurrence oracle: S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    s0 = jnp.zeros((B_, H, P, N), jnp.float32) if initial_state is None \
+        else initial_state
+
+    def step(s, t):
+        dec = jnp.exp(dt[:, t] * A)[..., None, None]
+        s = s * dec + jnp.einsum("bh,bhn,bhp->bhpn", dt[:, t], Bm[:, t],
+                                 x[:, t])
+        y = jnp.einsum("bhpn,bhn->bhp", s, Cm[:, t])
+        return s, y
+
+    s, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def tiled_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        a.dtype)

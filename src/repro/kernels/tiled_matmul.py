@@ -1,0 +1,65 @@
+"""Plan-driven tiled matmul Pallas TPU kernel.
+
+The direct embodiment of the local-partitioning pass: (bm, bk, bn) come
+from ``plan.partitions['tiled_matmul']`` — the multi-bank PLM config —
+and the kernel just uses them.  fp32 accumulator tile in VMEM; K is the
+innermost (sequential) grid dim so the accumulator is reused across K
+steps (the paper's "sharing physical memories": one accumulator bank
+serves all K banks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def tiled_matmul(
+    a: jax.Array,              # (M, K)
+    b: jax.Array,              # (K, N)
+    *,
+    bm: int = 512,
+    bk: int = 512,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,49 @@
+"""Serving launcher: batched requests through the ServeEngine."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_arch
+    from repro.models import init_params
+    from repro.models.lm import RunCfg
+    from repro.serve.engine import ServeEngine
+
+    arch = get_arch(args.arch).reduced()
+    params = init_params(arch, jax.random.PRNGKey(0))
+    cfg = RunCfg(block_q=32, ssd_chunk=16)
+    engine = ServeEngine(arch, params, cfg, max_batch=args.max_batch,
+                         max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for _ in range(args.requests):
+        plen = int(rng.integers(8, args.max_len - args.new_tokens - 1))
+        engine.submit(rng.integers(0, arch.vocab_size, (plen,)),
+                      max_new_tokens=args.new_tokens)
+    done = engine.run_until_idle()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+    for r in done[:3]:
+        print(f"  rid={r.rid} ttft={(r.t_first-r.t_submit)*1e3:.0f}ms "
+              f"total={(r.t_done-r.t_submit)*1e3:.0f}ms "
+              f"tokens={r.out_tokens[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-8b ...``
+
+Runs the full flow: specialize (the paper's compilation passes) → lower
+("HLS") → train with checkpointing on whatever mesh this process has.
+For the production meshes use the dry-run; this launcher runs reduced
+configs end-to-end on local devices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced (CPU-sized) config")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.base import ShapeConfig, get_arch
+    from repro.core.pipeline import specialize
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    shape = ShapeConfig("cli", "train", args.seq_len, args.batch)
+    mesh = make_host_mesh(model=args.model_parallel)
+    plan = specialize(arch, shape,
+                      mesh_axes=tuple(mesh.axis_names),
+                      mesh_shape=tuple(mesh.devices.shape))
+    print("plan decisions:")
+    for entry in plan.log:
+        print("  ", " | ".join(entry))
+    trainer = Trainer(plan, mesh, TrainerConfig(
+        n_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, log_every=max(args.steps // 10, 1)),
+        arch=arch, shape=shape)
+    state, metrics = trainer.fit()
+    print("final:", {k: float(v) for k, v in metrics.items()})
+
+
+if __name__ == "__main__":
+    main()

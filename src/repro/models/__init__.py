@@ -1,0 +1,19 @@
+from repro.models.lm import (
+    RunCfg,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    leaf_specs,
+    param_axes,
+    param_shapes,
+    prefill,
+    train_loss,
+)
+from repro.models.frontends import input_axes, input_specs, synthetic_batch
+
+__all__ = [
+    "RunCfg", "decode_step", "forward", "init_cache", "init_params",
+    "leaf_specs", "param_axes", "param_shapes", "prefill", "train_loss",
+    "input_axes", "input_specs", "synthetic_batch",
+]

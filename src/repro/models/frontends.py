@@ -1,0 +1,90 @@
+"""Modality frontends (STUBS per the assignment) + input specs.
+
+``[audio]``/``[vlm]`` architectures specify the transformer backbone
+only; the conv feature extractor (hubert) and vision tower (qwen2-vl)
+are stubs that provide *precomputed* frame/patch embeddings.  This
+module is the single source of truth for what each (arch × shape) step
+function consumes:
+
+* ``input_specs(arch, shape)``   — ShapeDtypeStructs (dry-run, no alloc)
+* ``synthetic_batch(arch, shape, key)`` — real arrays (smoke tests, CPU)
+
+Logical input axes (for the sharding rules): batch -> data(+pod),
+seq -> None, act_embed -> None.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def input_axes(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    """Logical axes per input (same vocabulary as the Memory IR)."""
+    ax: Dict[str, Tuple] = {}
+    if shape.kind == "decode":
+        ax["tokens"] = ("batch", None)
+    elif arch.modality in ("audio", "vlm"):
+        ax["embeds"] = ("batch", "seq", None)
+        if arch.mrope_sections is not None:
+            ax["positions"] = (None, "batch", "seq")
+        if shape.kind == "train":
+            ax["targets"] = ("batch", "seq")
+        if arch.modality == "audio" and shape.kind == "train":
+            ax["mask"] = ("batch", "seq")
+    else:
+        ax["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            ax["targets"] = ("batch", "seq")
+    return ax
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        out["tokens"] = sd((B, 1), jnp.int32)
+        return out
+    if arch.modality in ("audio", "vlm"):
+        out["embeds"] = sd((B, S, arch.d_model), jnp.bfloat16)
+        if arch.mrope_sections is not None:
+            out["positions"] = sd((3, B, S), jnp.int32)
+        if shape.kind == "train":
+            out["targets"] = sd((B, S), jnp.int32)
+        if arch.modality == "audio" and shape.kind == "train":
+            out["mask"] = sd((B, S), jnp.float32)
+    else:
+        out["tokens"] = sd((B, S), jnp.int32)
+        if shape.kind == "train":
+            out["targets"] = sd((B, S), jnp.int32)
+    return out
+
+
+def synthetic_batch(arch: ArchConfig, shape: ShapeConfig,
+                    key: jax.Array) -> Dict[str, Any]:
+    """Concrete random batch matching ``input_specs`` (smoke tests)."""
+    specs = input_specs(arch, shape)
+    out: Dict[str, Any] = {}
+    for name, spec in specs.items():
+        key, k = jax.random.split(key)
+        if name in ("tokens", "targets"):
+            out[name] = jax.random.randint(k, spec.shape, 0, arch.vocab_size,
+                                           dtype=jnp.int32)
+        elif name == "positions":
+            pos = jnp.broadcast_to(
+                jnp.arange(spec.shape[-1], dtype=jnp.int32), spec.shape)
+            out[name] = pos
+        elif name == "mask":
+            out[name] = (jax.random.uniform(k, spec.shape) < 0.5).astype(
+                jnp.float32)
+        else:  # embeds
+            out[name] = jax.random.normal(k, spec.shape, jnp.float32).astype(
+                spec.dtype)
+    return out

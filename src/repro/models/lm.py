@@ -1,0 +1,785 @@
+"""Model assembly: all ten architectures behind one functional interface.
+
+Structure
+---------
+Parameters are nested dicts of arrays, *stacked over scan groups*:
+``lax.scan`` over layers keeps the HLO size O(1) in depth (an 80-layer
+72B model lowers in seconds).  Architectures with interleaved layer kinds
+(llama4: dense/MoE alternation) scan over super-blocks of
+``moe_interleave`` layers; hymba passes per-layer window sizes as scan
+inputs so global/sliding layers share one body.
+
+Entry points (all pure):
+  * ``init_params(arch, key, ...)``
+  * ``param_specs(arch, ...)``        — ShapeDtypeStructs + logical axes
+  * ``train_loss(arch, params, batch, cfg)``
+  * ``prefill(arch, params, batch, cfg)``  -> (logits_last, cache)
+  * ``decode_step(arch, params, cache, batch, cfg)`` -> (logits, cache)
+
+The model is *mostly unaware* of the memory plan (paper §4): it consumes
+only a tiny ``RunCfg`` of lowering-relevant knobs that the plan's
+lowering pass fills in (block sizes, remat policy, moe path, padded
+vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.describe import global_layer_mask
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttnParams
+from repro.models.common import (
+    cross_entropy_loss,
+    rms_norm,
+    sinusoidal_positions,
+    truncated_normal_init,
+)
+from repro.models.moe import MoEParams
+from repro.models.ssm import SSMDims, SSMParams
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCfg:
+    """Plan-derived lowering knobs (filled by core.passes.lowering)."""
+
+    vocab_padded: int = 0          # 0 -> arch.vocab_size
+    heads_padded: int = 0          # 0 -> arch.n_heads (layout pass pads to TP)
+    kv_heads_padded: int = 0       # 0 -> arch.n_kv_heads
+    ssm_heads_padded: int = 0      # 0 -> arch.ssm_heads
+    kv_heads_sharded: bool = True  # False -> constrain k/v replicated on TP
+    shard_heads: bool = True       # False (fsdp_dp): no head constraints
+    block_q: int = 512             # attention query tile
+    ssd_chunk: int = 256           # SSD chunk length
+    remat: str = "none"            # none | dots | full
+    moe_impl: str = "gshard_einsum"  # or shard_map_alltoall | dense_einsum
+    decode_impl: str = "xla"       # or shard_map_flash (seq-sharded cache)
+    mesh: Optional[jax.sharding.Mesh] = None   # needed by shard_map path
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    batch_spec: Any = None         # resolved batch-dim mesh assignment
+    aux_loss_weight: float = 0.01
+
+
+_U = jax.sharding.PartitionSpec.UNCONSTRAINED
+
+
+def _hint(x, cfg: "RunCfg", *spec):
+    """with_sharding_constraint helper.
+
+    spec entries: mesh-axis name (shard), "rep" (force replicated), or
+    None (leave unconstrained).  No-op without a mesh (smoke tests).
+    """
+    if cfg.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    full = tuple(None if s == "rep" else (_U if s is None else s)
+                 for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(cfg.mesh, P(*full)))
+
+
+# =====================================================================
+# Parameter specs
+# =====================================================================
+
+class LeafSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: str
+    axes: Tuple[Optional[str], ...]
+    scale: float = 0.02
+
+
+def _attn_specs(arch: ArchConfig, Lg: int, d: int,
+                heads_padded: int = 0,
+                kv_heads_padded: int = 0) -> Dict[str, LeafSpec]:
+    hd = arch.hd
+    H = heads_padded or arch.n_heads
+    K = kv_heads_padded or arch.n_kv_heads
+    specs = {
+        "wq": LeafSpec((Lg, d, H * hd), "bfloat16",
+                       ("layers", "embed", "heads")),
+        "wk": LeafSpec((Lg, d, K * hd), "bfloat16",
+                       ("layers", "embed", "kv_heads")),
+        "wv": LeafSpec((Lg, d, K * hd), "bfloat16",
+                       ("layers", "embed", "kv_heads")),
+        "wo": LeafSpec((Lg, H * hd, d), "bfloat16",
+                       ("layers", "heads", "embed"),
+                       scale=0.02 / math.sqrt(2 * arch.n_layers)),
+    }
+    if arch.qk_norm:
+        specs["q_norm"] = LeafSpec((Lg, hd), "float32", ("layers", None), 0.0)
+        specs["k_norm"] = LeafSpec((Lg, hd), "float32", ("layers", None), 0.0)
+    return specs
+
+
+def _mlp_specs(arch: ArchConfig, Lg: int, d: int, ff: int) -> Dict[str, LeafSpec]:
+    gated = arch.gated_mlp and arch.family != "encoder"
+    n_in = 2 if gated else 1
+    return {
+        "wi": LeafSpec((Lg, d, n_in * ff), "bfloat16", ("layers", "embed", "ff")),
+        "wo": LeafSpec((Lg, ff, d), "bfloat16", ("layers", "ff", "embed"),
+                       scale=0.02 / math.sqrt(2 * arch.n_layers)),
+    }
+
+
+def _moe_specs(arch: ArchConfig, Lg: int, d: int) -> Dict[str, LeafSpec]:
+    ff = arch.moe_d_ff or arch.d_ff
+    E = arch.n_experts
+    specs = {
+        "router": LeafSpec((Lg, d, E), "float32", ("layers", "embed", None)),
+        "wi": LeafSpec((Lg, E, d, 2 * ff), "bfloat16",
+                       ("layers", "experts", "embed", "ff")),
+        "wo": LeafSpec((Lg, E, ff, d), "bfloat16",
+                       ("layers", "experts", "ff", "embed"),
+                       scale=0.02 / math.sqrt(2 * arch.n_layers)),
+    }
+    if arch.n_shared_experts:
+        sf = ff * arch.n_shared_experts
+        specs["shared_wi"] = LeafSpec((Lg, d, 2 * sf), "bfloat16",
+                                      ("layers", "embed", "ff"))
+        specs["shared_wo"] = LeafSpec((Lg, sf, d), "bfloat16",
+                                      ("layers", "ff", "embed"),
+                                      scale=0.02 / math.sqrt(2 * arch.n_layers))
+    return specs
+
+
+def _ssm_specs(arch: ArchConfig, Lg: int, d: int,
+               ssm_heads_padded: int = 0) -> Dict[str, LeafSpec]:
+    H = ssm_heads_padded or arch.ssm_heads
+    di = H * arch.ssm_head_dim
+    G, N = arch.ssm_n_groups, arch.ssm_state
+    cdim = di + 2 * G * N
+    return {
+        "in_proj": LeafSpec((Lg, d, 2 * di + 2 * G * N + H), "bfloat16",
+                            ("layers", "embed", "ssm_inner")),
+        "conv_w": LeafSpec((Lg, arch.ssm_conv, cdim), "bfloat16",
+                           ("layers", None, "ssm_inner")),
+        "conv_b": LeafSpec((Lg, cdim), "bfloat16", ("layers", "ssm_inner"), 0.0),
+        "A_log": LeafSpec((Lg, H), "float32", ("layers", "ssm_heads"), 0.0),
+        "D": LeafSpec((Lg, H), "float32", ("layers", "ssm_heads"), 0.0),
+        "dt_bias": LeafSpec((Lg, H), "float32", ("layers", "ssm_heads"), 0.0),
+        "norm": LeafSpec((Lg, di), "float32", ("layers", "ssm_inner"), 0.0),
+        "out_proj": LeafSpec((Lg, di, d), "bfloat16",
+                             ("layers", "ssm_inner", "embed"),
+                             scale=0.02 / math.sqrt(2 * arch.n_layers)),
+    }
+
+
+def leaf_specs(arch: ArchConfig, vocab_padded: int = 0,
+               heads_padded: int = 0,
+               ssm_heads_padded: int = 0,
+               kv_heads_padded: int = 0) -> Dict[str, Any]:
+    """The full parameter-spec pytree for an architecture."""
+    d = arch.d_model
+    V = vocab_padded or arch.vocab_size
+    L = arch.n_layers
+    g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
+    Lg = L // g
+
+    specs: Dict[str, Any] = {
+        "embed": LeafSpec((V, d), "bfloat16", ("vocab", "embed"), 0.02),
+        "final_norm": LeafSpec((d,), "float32", ("embed",), 0.0),
+    }
+    if not arch.tie_embeddings:
+        specs["lm_head"] = LeafSpec((d, V), "bfloat16", ("embed", "vocab"))
+
+    blocks: Dict[str, Any] = {}
+
+    def mixer_specs(Lh: int) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"pre_norm": LeafSpec((Lh, d), "float32",
+                                                    ("layers", "embed"), 0.0)}
+        if arch.has_attention:
+            out["attn"] = _attn_specs(arch, Lh, d, heads_padded,
+                                      kv_heads_padded)
+        if arch.has_ssm:
+            out["ssm"] = _ssm_specs(arch, Lh, d, ssm_heads_padded)
+        return out
+
+    if arch.family == "ssm":
+        blocks.update(mixer_specs(Lg))
+    elif arch.is_moe and g > 1:
+        # llama4: [dense, moe] super-block
+        blocks["dense"] = {**mixer_specs(Lg),
+                           "mlp_norm": LeafSpec((Lg, d), "float32",
+                                                ("layers", "embed"), 0.0),
+                           "mlp": _mlp_specs(arch, Lg, d, arch.d_ff)}
+        blocks["moe"] = {**mixer_specs(Lg),
+                         "mlp_norm": LeafSpec((Lg, d), "float32",
+                                              ("layers", "embed"), 0.0),
+                         "moe": _moe_specs(arch, Lg, d)}
+    elif arch.is_moe:
+        blocks.update(mixer_specs(Lg))
+        blocks["mlp_norm"] = LeafSpec((Lg, d), "float32", ("layers", "embed"), 0.0)
+        blocks["moe"] = _moe_specs(arch, Lg, d)
+    else:
+        blocks.update(mixer_specs(Lg))
+        blocks["mlp_norm"] = LeafSpec((Lg, d), "float32", ("layers", "embed"), 0.0)
+        blocks["mlp"] = _mlp_specs(arch, Lg, d, arch.d_ff)
+
+    specs["blocks"] = blocks
+    return specs
+
+
+def param_shapes(arch: ArchConfig, vocab_padded: int = 0,
+                 heads_padded: int = 0, ssm_heads_padded: int = 0,
+                 kv_heads_padded: int = 0):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        leaf_specs(arch, vocab_padded, heads_padded, ssm_heads_padded,
+                   kv_heads_padded),
+        is_leaf=lambda x: isinstance(x, LeafSpec))
+
+
+def param_axes(arch: ArchConfig, vocab_padded: int = 0,
+               heads_padded: int = 0, ssm_heads_padded: int = 0,
+               kv_heads_padded: int = 0):
+    return jax.tree.map(
+        lambda s: s.axes,
+        leaf_specs(arch, vocab_padded, heads_padded, ssm_heads_padded,
+                   kv_heads_padded),
+        is_leaf=lambda x: isinstance(x, LeafSpec))
+
+
+def init_params(arch: ArchConfig, key: jax.Array, vocab_padded: int = 0,
+                heads_padded: int = 0, ssm_heads_padded: int = 0,
+                kv_heads_padded: int = 0):
+    specs = leaf_specs(arch, vocab_padded, heads_padded, ssm_heads_padded,
+                       kv_heads_padded)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, LeafSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.scale == 0.0:
+            out.append(jnp.zeros(s.shape, jnp.dtype(s.dtype)))
+        else:
+            out.append(truncated_normal_init(k, s.shape, jnp.dtype(s.dtype),
+                                             s.scale))
+    params = jax.tree.unflatten(treedef, out)
+    # dead (layout-pass padded) q/kv heads: zero padded wq/wk/wv cols,
+    # wo rows — they contribute nothing at init
+    if arch.has_attention and heads_padded and heads_padded != arch.n_heads:
+        cut = arch.n_heads * arch.hd
+        for grp in _mixer_groups(params):
+            if "attn" in grp:
+                grp["attn"]["wq"] = grp["attn"]["wq"].at[..., cut:].set(0)
+                grp["attn"]["wo"] = grp["attn"]["wo"].at[:, cut:, :].set(0)
+    if arch.has_attention and kv_heads_padded and             kv_heads_padded != arch.n_kv_heads:
+        cut = arch.n_kv_heads * arch.hd
+        for grp in _mixer_groups(params):
+            if "attn" in grp:
+                grp["attn"]["wk"] = grp["attn"]["wk"].at[..., cut:].set(0)
+                grp["attn"]["wv"] = grp["attn"]["wv"].at[..., cut:].set(0)
+    # SSM: A_log ~ log(uniform[1,16]), dt_bias ~ inv_softplus(uniform)
+    def fix_ssm(p):
+        if arch.has_ssm:
+            for grp in _mixer_groups(p):
+                if "ssm" in grp:
+                    Lh, H = grp["ssm"]["A_log"].shape
+                    a = jnp.log(jnp.linspace(1.0, 16.0, H))[None, :]
+                    grp["ssm"]["A_log"] = jnp.broadcast_to(a, (Lh, H)).astype(
+                        jnp.float32)
+                    grp["ssm"]["D"] = jnp.ones((Lh, H), jnp.float32)
+                    grp["ssm"]["dt_bias"] = jnp.full((Lh, H), -2.0, jnp.float32)
+        return p
+    return fix_ssm(params)
+
+
+def _mixer_groups(params):
+    b = params["blocks"]
+    if "dense" in b and isinstance(b["dense"], dict):
+        return [b["dense"], b["moe"]]
+    return [b]
+
+
+# =====================================================================
+# Forward pass
+# =====================================================================
+
+def _embed_in(arch, params, batch, cfg):
+    """Returns (x (B,S,d) bf16, positions, mask_positions (B,S))."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.bfloat16)
+        B, S = x.shape[:2]
+        if arch.modality == "audio":
+            x = x + sinusoidal_positions(S, arch.d_model)[None].astype(x.dtype)
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if "positions" in batch:
+        positions = batch["positions"]              # (3,B,S) mrope or (B,S)
+        mask_pos = positions[0] if positions.ndim == 3 else positions
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if arch.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+            mask_pos = positions[0]
+        else:
+            mask_pos = positions
+    return x, positions, mask_pos
+
+
+def _logits(arch, params, x, cfg):
+    # stays bf16 (and vocab-sharded); CE/sampling upcast inside fused
+    # reductions so the fp32 full-vocab tensor never hits HBM
+    w = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    return x @ w
+
+
+def _ssm_dims(arch: ArchConfig, sp: SSMParams = None) -> SSMDims:
+    if sp is not None:  # padding-aware: heads from A_log, di from out_proj
+        H = sp.A_log.shape[-1]
+        di = sp.out_proj.shape[-2]
+        return SSMDims(arch.d_model, di, H, di // H, arch.ssm_state,
+                       arch.ssm_n_groups, arch.ssm_conv)
+    return SSMDims(arch.d_model, arch.d_inner, arch.ssm_heads,
+                   arch.ssm_head_dim, arch.ssm_state, arch.ssm_n_groups,
+                   arch.ssm_conv)
+
+
+def _mixer_fwd(arch, cfg, grp, x, positions, mask_pos, window):
+    """Pre-norm mixer: attention and/or SSM paths (parallel for hybrid)."""
+    h = rms_norm(x, grp["pre_norm"], arch.norm_eps)
+    out = 0.0
+    n_paths = int(arch.has_attention) + int(arch.has_ssm)
+    if arch.has_attention:
+        ap = AttnParams(grp["attn"]["wq"], grp["attn"]["wk"],
+                        grp["attn"]["wv"], grp["attn"]["wo"],
+                        grp["attn"].get("q_norm"), grp["attn"].get("k_norm"))
+        Hq = ap.wq.shape[-1] // arch.hd        # layout pass may pad heads
+        q, k, v = attn_mod.project_qkv(
+            h, ap, Hq, ap.wk.shape[-1] // arch.hd, arch.hd, positions,
+            arch.rope_theta, arch.mrope_sections, arch.norm_eps)
+        if cfg.shard_heads:
+            q = _hint(q, cfg, None, None, cfg.model_axis, None)
+            kv_spec = cfg.model_axis if cfg.kv_heads_sharded else "rep"
+            k = _hint(k, cfg, None, None, kv_spec, None)
+            v = _hint(v, cfg, None, None, kv_spec, None)
+        ctx = attn_mod.attention_chunked(
+            q, k, v, causal=arch.causal, window=window,
+            block_q=cfg.block_q, positions=mask_pos)
+        out = out + ctx.reshape(*ctx.shape[:2], -1) @ ap.wo
+    if arch.has_ssm:
+        sp = SSMParams(**grp["ssm"])
+        out = out + ssm_mod.ssm_forward(h, sp, _ssm_dims(arch, sp),
+                                        chunk=cfg.ssd_chunk)
+    return x + out / n_paths
+
+
+def _ffn_fwd(arch, cfg, grp, x):
+    """Pre-norm FFN: dense MLP or MoE. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in grp:
+        h = rms_norm(x, grp["mlp_norm"], arch.norm_eps)
+        wi, wo = grp["mlp"]["wi"], grp["mlp"]["wo"]
+        gated = arch.gated_mlp and arch.family != "encoder"
+        z = h @ wi
+        if gated:
+            g, u = jnp.split(z, 2, axis=-1)
+            z = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        elif arch.family == "encoder":
+            z = jax.nn.gelu(z.astype(jnp.float32)).astype(x.dtype)
+        else:  # squared relu (minitron/nemotron)
+            z = jnp.square(jax.nn.relu(z.astype(jnp.float32))).astype(x.dtype)
+        x = x + z @ wo
+    elif "moe" in grp:
+        h = rms_norm(x, grp["mlp_norm"], arch.norm_eps)
+        mp = MoEParams(grp["moe"]["router"], grp["moe"]["wi"], grp["moe"]["wo"],
+                       grp["moe"].get("shared_wi"), grp["moe"].get("shared_wo"))
+        if cfg.moe_impl == "shard_map_alltoall" and cfg.mesh is not None:
+            y, aux = moe_mod.moe_shard_map(
+                h, mp, top_k=arch.experts_per_token,
+                capacity_factor=arch.capacity_factor, mesh=cfg.mesh,
+                data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+        elif cfg.moe_impl == "dense_einsum":
+            y, aux = moe_mod.moe_dense_einsum(
+                h, mp, top_k=arch.experts_per_token)
+        else:
+            y, aux = moe_mod.moe_gshard_einsum(
+                h, mp, top_k=arch.experts_per_token,
+                capacity_factor=arch.capacity_factor)
+        x = x + y
+    return x, aux
+
+
+def _block_fwd(arch, cfg, grp, x, positions, mask_pos, window):
+    x = _mixer_fwd(arch, cfg, grp, x, positions, mask_pos, window)
+    if arch.family == "ssm":
+        return x, jnp.zeros((), jnp.float32)
+    return _ffn_fwd(arch, cfg, grp, x)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy in ("dots", "dots_saveable"):
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _window_schedule(arch: ArchConfig) -> jnp.ndarray:
+    """(L,) per-layer attention window (0 = unlimited/global)."""
+    mask = global_layer_mask(arch)
+    return jnp.asarray(
+        [0 if g else arch.window for g in mask], dtype=jnp.int32)
+
+
+def forward(arch: ArchConfig, params, batch, cfg: RunCfg):
+    """Full-sequence forward -> (hidden (B,S,d), aux_loss)."""
+    x, positions, mask_pos = _embed_in(arch, params, batch, cfg)
+    # the embedding gather cannot carry both the batch sharding (indices)
+    # and the table's feature sharding; pin the residual stream's batch dim
+    # so GSPMD never replicates the activations (fsdp_dp strategy)
+    if cfg.batch_spec is not None:
+        x = _hint(x, cfg, cfg.batch_spec, None, "rep")
+    g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
+    Lg = arch.n_layers // g
+    windows = _window_schedule(arch) if arch.has_attention else None
+
+    def body(carry, xs):
+        x, aux = carry
+        if g > 1:
+            grp_params, w = xs
+            x = _mixer_fwd(arch, cfg, grp_params["dense"], x, positions,
+                           mask_pos, w[0] if windows is not None else 0)
+            x, a1 = _ffn_fwd(arch, cfg, grp_params["dense"], x)
+            x = _mixer_fwd(arch, cfg, grp_params["moe"], x, positions,
+                           mask_pos, w[1] if windows is not None else 0)
+            x, a2 = _ffn_fwd(arch, cfg, grp_params["moe"], x)
+            return (x, aux + a1 + a2), None
+        grp_params, w = xs
+        x, a = _block_fwd(arch, cfg, grp_params, x, positions, mask_pos,
+                          w if windows is not None else 0)
+        if cfg.batch_spec is not None:
+            x = _hint(x, cfg, cfg.batch_spec, None, "rep")
+        return (x, aux + a), None
+
+    body = _remat(body, cfg.remat)
+    if g > 1:
+        w_xs = windows.reshape(Lg, g) if windows is not None \
+            else jnp.zeros((Lg, g), jnp.int32)
+        xs = (params["blocks"], w_xs)
+    else:
+        w_xs = windows if windows is not None else jnp.zeros((Lg,), jnp.int32)
+        xs = (params["blocks"], w_xs)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = rms_norm(x, params["final_norm"], arch.norm_eps)
+    return x, aux
+
+
+def train_loss(arch: ArchConfig, params, batch, cfg: RunCfg):
+    """Scalar loss for one batch. batch: tokens/embeds, targets, [mask]."""
+    x, aux = forward(arch, params, batch, cfg)
+    logits = _logits(arch, params, x, cfg)
+    loss, n = cross_entropy_loss(
+        logits, batch["targets"], batch.get("mask"),
+        vocab_size=arch.vocab_size)
+    metrics = {"ce_loss": loss, "aux_loss": aux, "tokens": n}
+    return loss + cfg.aux_loss_weight * aux, metrics
+
+
+# =====================================================================
+# Serving: prefill + decode
+# =====================================================================
+
+def init_cache(arch: ArchConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16, ssm_heads: int = 0,
+               kv_heads: int = 0) -> Dict[str, Any]:
+    """Session state ("cache.kv" + SSM states in the template)."""
+    L = arch.n_layers
+    Hs = ssm_heads or arch.ssm_heads
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if arch.has_attention:
+        K, hd = kv_heads or arch.n_kv_heads, arch.hd
+        cache["k"] = jnp.zeros((L, batch_size, max_len, K, hd), dtype)
+        cache["v"] = jnp.zeros((L, batch_size, max_len, K, hd), dtype)
+    if arch.has_ssm:
+        cache["ssm"] = jnp.zeros(
+            (L, batch_size, Hs, arch.ssm_head_dim, arch.ssm_state),
+            jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (L, batch_size, arch.ssm_conv,
+             Hs * arch.ssm_head_dim + 2 * arch.ssm_n_groups * arch.ssm_state),
+            jnp.bfloat16)
+    return cache
+
+
+def _flatten_groups(arch, params):
+    """Stacked per-layer params (group-interleaved archs -> per-layer)."""
+    g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
+    return params["blocks"], g
+
+
+def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
+    """One-token decode across all layers. Returns (logits, new_cache)."""
+    x, positions, _ = _embed_in(arch, params, batch, cfg)   # (B,1,d)
+    pos = cache["pos"]
+    B = x.shape[0]
+    if "positions" not in batch:
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        if arch.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions, (3, B, 1))
+    windows = _window_schedule(arch) if arch.has_attention else \
+        jnp.zeros((arch.n_layers,), jnp.int32)
+    blocks, g = _flatten_groups(arch, params)
+
+    def layer(x, grp, w, kc, vc, sc, cc):
+        """One layer of decode; returns (x, new kc/vc/sc/cc)."""
+        h = rms_norm(x, grp["pre_norm"], arch.norm_eps)
+        out = 0.0
+        n_paths = int(arch.has_attention) + int(arch.has_ssm)
+        if arch.has_attention:
+            ap = AttnParams(grp["attn"]["wq"], grp["attn"]["wk"],
+                            grp["attn"]["wv"], grp["attn"]["wo"],
+                            grp["attn"].get("q_norm"), grp["attn"].get("k_norm"))
+            Hq = ap.wq.shape[-1] // arch.hd
+            q, k, v = attn_mod.project_qkv(
+                h, ap, Hq, ap.wk.shape[-1] // arch.hd, arch.hd, positions,
+                arch.rope_theta, arch.mrope_sections, arch.norm_eps)
+            if cfg.decode_impl == "shard_map_flash" and cfg.mesh is not None:
+                from repro.dist.flash_decode import flash_decode
+                ctx, kc, vc = flash_decode(
+                    q, k, v, kc, vc, pos, w, mesh=cfg.mesh,
+                    data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+            else:
+                if not cfg.shard_heads:
+                    pass
+                elif cfg.kv_heads_sharded:
+                    q = _hint(q, cfg, None, None, cfg.model_axis, None)
+                    k = _hint(k, cfg, None, None, cfg.model_axis, None)
+                    v = _hint(v, cfg, None, None, cfg.model_axis, None)
+                else:
+                    # match the head_dim-sharded cache: QK^T contracts the
+                    # sharded dim -> psum of the score tensor, and the
+                    # cache append stays local
+                    q = _hint(q, cfg, None, None, "rep", cfg.model_axis)
+                    k = _hint(k, cfg, None, None, "rep", cfg.model_axis)
+                    v = _hint(v, cfg, None, None, "rep", cfg.model_axis)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+                ctx = attn_mod.attention_decode(q, kc, vc, cache_len=pos + 1,
+                                                window=w)
+            out = out + ctx.reshape(B, 1, -1) @ ap.wo
+        if arch.has_ssm:
+            sp = SSMParams(**grp["ssm"])
+            y, sc, cc = ssm_mod.ssm_decode_step(h, sp, _ssm_dims(arch, sp),
+                                                sc, cc)
+            out = out + y
+        x = x + out / n_paths
+        if arch.family != "ssm" and ("mlp" in grp or "moe" in grp):
+            x, _ = _ffn_fwd(arch, cfg, grp, x)
+        return x, kc, vc, sc, cc
+
+    # scan over layers with the FULL stacked cache in the carry: each
+    # iteration slices its layer and updates it in place (dynamic-update-
+    # slice on the unsharded layer dim), so the cache buffer is aliased
+    # end-to-end (with donation) instead of double-buffered through ys.
+    L = arch.n_layers
+    Lg = L // g
+    kc_full = cache.get("k")
+    vc_full = cache.get("v")
+    sc_full = cache.get("ssm")
+    cc_full = cache.get("conv")
+    win = windows
+    if g > 1:
+        kc_full = kc_full.reshape(Lg, g, *kc_full.shape[1:]) \
+            if kc_full is not None else None
+        vc_full = vc_full.reshape(Lg, g, *vc_full.shape[1:]) \
+            if vc_full is not None else None
+        win = windows.reshape(Lg, g)
+        if sc_full is not None:
+            sc_full = sc_full.reshape(Lg, g, *sc_full.shape[1:])
+            cc_full = cc_full.reshape(Lg, g, *cc_full.shape[1:])
+    zeros = lambda: jnp.zeros((Lg, 1), jnp.float32)
+    kc_full = kc_full if kc_full is not None else zeros()
+    vc_full = vc_full if vc_full is not None else zeros()
+    sc_full = sc_full if sc_full is not None else zeros()
+    cc_full = cc_full if cc_full is not None else zeros()
+
+    def at(full, i):
+        return jax.lax.dynamic_index_in_dim(full, i, axis=0, keepdims=False)
+
+    def put(full, i, val):
+        return jax.lax.dynamic_update_index_in_dim(full, val, i, axis=0)
+
+    def body(carry, xs):
+        x, i, kf, vf, sf, cf = carry
+        grp, w = xs
+        kc, vc, sc, cc = at(kf, i), at(vf, i), at(sf, i), at(cf, i)
+        if g > 1:
+            x, kc0, vc0, sc0, cc0 = layer(x, grp["dense"], w[0],
+                                          kc[0], vc[0], sc[0], cc[0])
+            x, kc1, vc1, sc1, cc1 = layer(x, grp["moe"], w[1],
+                                          kc[1], vc[1], sc[1], cc[1])
+            kc = jnp.stack([kc0, kc1]) if arch.has_attention else kc
+            vc = jnp.stack([vc0, vc1]) if arch.has_attention else vc
+            sc = jnp.stack([sc0, sc1]) if arch.has_ssm else sc
+            cc = jnp.stack([cc0, cc1]) if arch.has_ssm else cc
+        else:
+            x, kc, vc, sc, cc = layer(x, grp, w, kc, vc, sc, cc)
+        return (x, i + 1, put(kf, i, kc), put(vf, i, vc),
+                put(sf, i, sc), put(cf, i, cc)), None
+
+    init = (x, jnp.zeros((), jnp.int32), kc_full, vc_full, sc_full, cc_full)
+    (x, _, new_k, new_v, new_s, new_c), _ = jax.lax.scan(
+        body, init, (blocks, win))
+    x = rms_norm(x, params["final_norm"], arch.norm_eps)
+    logits = _logits(arch, params, x, cfg)
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if arch.has_attention:
+        new_cache["k"] = new_k.reshape(L, *new_k.shape[2:]) if g > 1 else new_k
+        new_cache["v"] = new_v.reshape(L, *new_v.shape[2:]) if g > 1 else new_v
+    if arch.has_ssm:
+        new_cache["ssm"] = new_s.reshape(L, *new_s.shape[2:]) if g > 1 else new_s
+        new_cache["conv"] = new_c.reshape(L, *new_c.shape[2:]) if g > 1 else new_c
+    return logits[:, 0], new_cache
+
+
+def prefill(arch: ArchConfig, params, batch, cfg: RunCfg, max_len: int = 0):
+    """Process a prompt, build the session cache, return last-token logits.
+
+    Implemented as the full-sequence forward plus cache extraction — the
+    K/V for every layer are recomputed from the per-layer projections in
+    a second scan that shares the same block params (cheap relative to
+    the FFN work, and keeps `forward` cache-free for training).
+    For SSM archs the final state comes from running the SSD scan.
+    """
+    x, positions, mask_pos = _embed_in(arch, params, batch, cfg)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    windows = _window_schedule(arch) if arch.has_attention else None
+    g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
+    Lg = arch.n_layers // g
+
+    cache = init_cache(arch, B, max_len)
+
+    def layer(x, grp, w):
+        h = rms_norm(x, grp["pre_norm"], arch.norm_eps)
+        out = 0.0
+        n_paths = int(arch.has_attention) + int(arch.has_ssm)
+        kv = (jnp.zeros((B, 0, 1, 1), jnp.bfloat16),) * 2
+        states = ()
+        if arch.has_attention:
+            ap = AttnParams(grp["attn"]["wq"], grp["attn"]["wk"],
+                            grp["attn"]["wv"], grp["attn"]["wo"],
+                            grp["attn"].get("q_norm"), grp["attn"].get("k_norm"))
+            Hq = ap.wq.shape[-1] // arch.hd
+            q, k, v = attn_mod.project_qkv(
+                h, ap, Hq, ap.wk.shape[-1] // arch.hd, arch.hd, positions,
+                arch.rope_theta, arch.mrope_sections, arch.norm_eps)
+            if cfg.shard_heads:
+                q = _hint(q, cfg, None, None, cfg.model_axis, None)
+                kv_spec = cfg.model_axis if cfg.kv_heads_sharded else "rep"
+                k = _hint(k, cfg, None, None, kv_spec, None)
+                v = _hint(v, cfg, None, None, kv_spec, None)
+            ctx = attn_mod.attention_chunked(
+                q, k, v, causal=arch.causal, window=w,
+                block_q=cfg.block_q, positions=mask_pos)
+            out = out + ctx.reshape(B, S, -1) @ ap.wo
+            kv = (k, v)
+        if arch.has_ssm:
+            sp = SSMParams(**grp["ssm"])
+            y, fin_s, fin_c = _ssm_prefill(h, sp, arch, cfg)
+            out = out + y
+            states = (fin_s, fin_c)
+        x = x + out / n_paths
+        aux = jnp.zeros((), jnp.float32)
+        if arch.family != "ssm" and ("mlp" in grp or "moe" in grp):
+            x, aux = _ffn_fwd(arch, cfg, grp, x)
+        return x, kv, states
+
+    def body(carry, xs):
+        x = carry
+        grp, w = xs
+        outs = []
+        if g > 1:
+            x, kv0, st0 = layer(x, grp["dense"], w[0])
+            x, kv1, st1 = layer(x, grp["moe"], w[1])
+            ys = _stack_cache(arch, (kv0, kv1), (st0, st1), max_len, S)
+        else:
+            x, kv, st = layer(x, grp, w)
+            ys = _stack_cache(arch, (kv,), (st,), max_len, S)
+        return x, ys
+
+    if g > 1:
+        w_xs = (windows.reshape(Lg, g) if windows is not None
+                else jnp.zeros((Lg, g), jnp.int32))
+    else:
+        w_xs = (windows if windows is not None
+                else jnp.zeros((Lg,), jnp.int32))
+    x, ys = jax.lax.scan(body, x, (params["blocks"], w_xs))
+    x = rms_norm(x, params["final_norm"], arch.norm_eps)
+    logits = _logits(arch, params, x[:, -1:], cfg)
+
+    # unpack stacked cache entries
+    L = arch.n_layers
+    idx = 0
+    if arch.has_attention:
+        cache["k"] = ys[idx].reshape(L, B, max_len, -1, arch.hd)
+        cache["v"] = ys[idx + 1].reshape(L, B, max_len, -1, arch.hd)
+        idx += 2
+    if arch.has_ssm:
+        cache["ssm"] = ys[idx].reshape(L, *ys[idx].shape[-4:])
+        cache["conv"] = ys[idx + 1].reshape(L, *ys[idx + 1].shape[-3:])
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits[:, 0], cache
+
+
+def _ssm_prefill(h, sp, arch, cfg):
+    """SSD forward that also returns the final (ssm, conv) states."""
+    dims = _ssm_dims(arch, sp)
+    B, S, d = h.shape
+    di, G, N = dims.d_inner, dims.n_groups, dims.state
+    zxbcdt = h @ sp.in_proj
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc = ssm_mod.causal_conv(xbc_raw, sp.conv_w, sp.conv_b)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, dims.n_heads, dims.head_dim)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + sp.dt_bias)
+    A = -jnp.exp(sp.A_log)
+    y, final = ssm_mod.ssd_chunked(xs, dtv, A, Bm, Cm, chunk=cfg.ssd_chunk)
+    y = y + xs * sp.D[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), sp.norm)
+    y = (y @ sp.out_proj).astype(h.dtype)
+    k = dims.conv_k
+    conv_fin = jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -k:, :] \
+        .astype(jnp.bfloat16)
+    return y, final, conv_fin
+
+
+def _stack_cache(arch, kvs, states, max_len, S):
+    """Build the per-scan-step cache ys tuple (padded to max_len)."""
+    out = []
+    if arch.has_attention:
+        ks = jnp.stack([jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+                        for k, _ in kvs])
+        vs = jnp.stack([jnp.pad(v, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+                        for _, v in kvs])
+        if len(kvs) == 1:
+            ks, vs = ks[0], vs[0]
+        out += [ks, vs]
+    if arch.has_ssm:
+        ss = jnp.stack([s[0] for s in states])
+        cs = jnp.stack([s[1] for s in states])
+        if len(states) == 1:
+            ss, cs = ss[0], cs[0]
+        out += [ss, cs]
+    return tuple(out)

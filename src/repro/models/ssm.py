@@ -1,0 +1,189 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked, pure JAX.
+
+Follows the minimal SSD formulation of arXiv:2405.21060 §6: the sequence
+is processed in chunks; intra-chunk terms are batched matmuls (MXU food),
+inter-chunk terms are a short recurrence over chunk states carried by
+``lax.scan``.  The chunk length comes from the local-partitioning pass
+(``plan.partitions['ssd_scan']``) — the same tile that configures the
+Pallas kernel in :mod:`repro.kernels.ssd_scan`.
+
+Decode is the O(1) recurrent update: ``S ← exp(dt·A)·S + dt·B⊗x``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array       # (d, 2*di + 2*g*n + h)  -> z, xBC, dt
+    conv_w: jax.Array        # (k, di + 2*g*n) depthwise causal conv
+    conv_b: jax.Array        # (di + 2*g*n,)
+    A_log: jax.Array         # (h,) fp32: A = -exp(A_log)
+    D: jax.Array             # (h,) fp32 skip
+    dt_bias: jax.Array       # (h,) fp32
+    norm: jax.Array          # (di,) gated RMSNorm scale
+    out_proj: jax.Array      # (di, d)
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int
+    n_groups: int
+    conv_k: int
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,            # (B, S, H, P) fp32
+    dt: jax.Array,           # (B, S, H) fp32 (post-softplus)
+    A: jax.Array,            # (H,) fp32 negative
+    Bm: jax.Array,           # (B, S, G, N) fp32
+    Cm: jax.Array,           # (B, S, G, N) fp32
+    chunk: int = 256,
+    initial_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is exact: decay=exp(0)=1, zero input contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // chunk
+
+    # chunked views
+    xc = x.reshape(B_, nc, chunk, H, Pd)
+    dtc = dt.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, G, N)
+    Cc = Cm.reshape(B_, nc, chunk, G, N)
+    # broadcast groups over heads: index map h -> g
+    Bh = jnp.repeat(Bc, rep, axis=3)         # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                              # (B,nc,Q,H)
+    dA = jnp.moveaxis(dA, -1, 2)              # (B,nc,H,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)           # (B,nc,H,Q)
+
+    # 1. intra-chunk (quadratic in chunk -> MXU)
+    L = jnp.exp(segsum(dA))                   # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                 # (B,nc,Q,H,P)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)        # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xdt)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (B,nc,H,Q)
+    states = jnp.einsum("bckhn,bchk,bckhp->bchpn", Bh, decay_states, xdt)
+
+    # 3. inter-chunk recurrence (the only sequential part)
+    chunk_decay = jnp.exp(dA_cs[..., -1])     # (B,nc,H)
+    s0 = (jnp.zeros((B_, H, Pd, N), x.dtype) if initial_state is None
+          else initial_state)
+
+    def step(carry, inp):
+        st, dec = inp                          # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev                       # emit the *incoming* state
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    # 4. contribution of the carried-in state to each position
+    state_decay = jnp.exp(dA_cs)               # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B_, S_pad, H, Pd)
+    return y[:, :S], final
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (k, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled taps: k is tiny (4)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return y + b
+
+
+def ssm_forward(
+    x: jax.Array,            # (B, S, d) residual stream, bf16
+    p: SSMParams,
+    dims: SSMDims,
+    chunk: int = 256,
+) -> jax.Array:
+    """Full-sequence (train/prefill) mamba2 mixer."""
+    B, S, d = x.shape
+    di, H, Pd, N, G = (dims.d_inner, dims.n_heads, dims.head_dim,
+                       dims.state, dims.n_groups)
+    zxbcdt = x @ p.in_proj                                   # (B,S,2di+2gn+h)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc = causal_conv(xbc, p.conv_w, p.conv_b)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B,S,H)
+    A = -jnp.exp(p.A_log)
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=chunk)
+    y = y + xs * p.D[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p.norm)
+    return (y @ p.out_proj).astype(x.dtype)
+
+
+def ssm_decode_step(
+    x: jax.Array,            # (B, 1, d)
+    p: SSMParams,
+    dims: SSMDims,
+    ssm_state: jax.Array,    # (B, H, P, N) fp32
+    conv_state: jax.Array,   # (B, k, di + 2*g*n)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) recurrent decode. Returns (y, ssm_state', conv_state')."""
+    B, _, d = x.shape
+    di, H, Pd, N, G = (dims.d_inner, dims.n_heads, dims.head_dim,
+                       dims.state, dims.n_groups)
+    zxbcdt = (x[:, 0] @ p.in_proj)                            # (B, ...)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    # roll the conv window
+    conv_state = jnp.concatenate([conv_state[:, 1:], xbc[:, None]], axis=1)
+    xbc = jnp.einsum("bkc,kc->bc", conv_state, p.conv_w) + p.conv_b
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, H, Pd)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)      # (B,H,N)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B,H)
+    A = -jnp.exp(p.A_log)
+    decay = jnp.exp(dt * A)[..., None, None]                  # (B,H,1,1)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, xs)
+    ssm_state = ssm_state * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Cm)
+    y = y + xs * p.D[None, :, None]
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p.norm)
+    return (y @ p.out_proj).astype(x.dtype)[:, None], ssm_state, conv_state

@@ -1,0 +1,10 @@
+from repro.optim.adamw import (
+    OptConfig,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+__all__ = ["OptConfig", "apply_updates", "global_norm", "init_opt_state",
+           "lr_schedule"]

@@ -1,0 +1,134 @@
+"""AdamW, pure JAX, with the plan's "technology" knobs.
+
+The data-organization pass may decide (under HBM pressure) to keep Adam
+moments in bf16 and/or drop the fp32 master copy; in the latter case the
+bf16 params are updated with *stochastic rounding* so the update bias
+stays zero.  Both decisions arrive via ``plan.opt``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"     # plan.opt["moment_dtype"]
+    master_weights: bool = True       # plan.opt["master_weights"]
+
+    @classmethod
+    def from_plan(cls, plan, **kw) -> "OptConfig":
+        return cls(moment_dtype=plan.opt["moment_dtype"],
+                   master_weights=plan.opt["master_weights"], **kw)
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    denom = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / denom, 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros_like = lambda p: jnp.zeros(p.shape, mdt)
+    state: Dict[str, Any] = {
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _stochastic_round_bf16(key: jax.Array, x: jax.Array) -> jax.Array:
+    """fp32 -> bf16 with probability proportional to the truncated bits."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    rnd = jax.random.bits(key, bits.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    rounded = (bits + rnd) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(
+        jnp.bfloat16)
+
+
+def apply_updates(
+    params,
+    grads,
+    state: Dict[str, Any],
+    cfg: OptConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (params', state', metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.betas
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    master = state.get("master", params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(master)
+
+    new_p, new_m, new_v, new_w = [], [], [], []
+    base_key = jax.random.fold_in(jax.random.PRNGKey(0x5AD3), step)
+    for i, (p, g, m, v, w) in enumerate(
+            zip(flat_p, flat_g, flat_m, flat_v, flat_w)):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        w32 = w.astype(jnp.float32)
+        # decoupled weight decay on everything that looks like a matrix
+        if p.ndim >= 2:
+            upd = upd + cfg.weight_decay * w32
+        w32 = w32 - lr * upd
+        if cfg.master_weights:
+            new_w.append(w32)
+            new_p.append(w32.astype(p.dtype))
+        else:
+            if p.dtype == jnp.bfloat16:
+                k = jax.random.fold_in(base_key, i)
+                new_p.append(_stochastic_round_bf16(k, w32))
+            else:
+                new_p.append(w32.astype(p.dtype))
+        new_m.append(m32.astype(mdt))
+        new_v.append(v32.astype(mdt))
+
+    params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    if cfg.master_weights:
+        new_state["master"] = jax.tree.unflatten(treedef, new_w)
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

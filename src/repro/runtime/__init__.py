@@ -1,0 +1,4 @@
+from repro.runtime.fault import HealthMonitor, RestartPolicy, StepGuard, elastic_mesh
+from repro.runtime.straggler import DeadlineSkipper, StepTimer
+__all__ = ["HealthMonitor", "RestartPolicy", "StepGuard", "elastic_mesh",
+           "DeadlineSkipper", "StepTimer"]

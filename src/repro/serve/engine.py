@@ -1,0 +1,140 @@
+"""Batched serving engine: continuous batching over prefill + decode.
+
+The session cache is the template's ``cache.kv`` component: allocated
+once at engine start (shape from the plan), slots assigned to requests,
+freed on completion — residency management, not reallocation.
+
+Scheduling: waiting requests are prefilled (padded to the bucket length)
+into free slots; every engine tick decodes one token for all active
+slots.  Greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.lm import RunCfg
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchConfig, params, cfg: RunCfg,
+                 max_batch: int = 8, max_len: int = 512,
+                 ssm_heads: int = 0, kv_heads: int = 0):
+        self.arch, self.params, self.cfg = arch, params, cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.cache = lm.init_cache(arch, max_batch, max_len,
+                                   ssm_heads=ssm_heads, kv_heads=kv_heads)
+        self.free_slots = list(range(max_batch))
+        self.active: Dict[int, Request] = {}
+        self.pending: List[Request] = []
+        self._rid = 0
+        self.finished: List[Request] = []
+        # slot-level position bookkeeping (cache["pos"] is per-engine tick;
+        # per-slot valid lengths live here)
+        self.slot_len = np.zeros((max_batch,), np.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(arch, p, b, cfg, max_len=max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        r = Request(self._rid, np.asarray(prompt, np.int32),
+                    max_new_tokens, temperature, t_submit=time.time())
+        self._rid += 1
+        self.pending.append(r)
+        return r.rid
+
+    def _admit(self) -> None:
+        """Prefill pending requests into free slots (one at a time batch=1
+        prefill; production would bucket same-length prompts)."""
+        while self.pending and self.free_slots:
+            r = self.pending.pop(0)
+            slot = self.free_slots.pop(0)
+            r.slot = slot
+            plen = len(r.prompt)
+            logits, cache1 = self._prefill(
+                self.params, {"tokens": r.prompt[None, :]})
+            # copy the single-sequence cache into the engine cache slot
+            for key in ("k", "v", "ssm", "conv"):
+                if key in self.cache:
+                    upd = cache1[key]
+                    pad = self.max_len - upd.shape[2] if key in ("k", "v") else 0
+                    if key in ("k", "v"):
+                        upd = jnp.pad(upd, ((0, 0), (0, 0), (0, pad),
+                                            (0, 0), (0, 0)))[:, 0] \
+                            if upd.shape[2] != self.max_len else upd[:, 0]
+                        self.cache[key] = self.cache[key].at[:, slot].set(upd)
+                    else:
+                        self.cache[key] = self.cache[key].at[:, slot].set(
+                            upd[:, 0])
+            tok = self._sample(logits[0], r.temperature)
+            r.out_tokens.append(int(tok))
+            r.t_first = time.time()
+            self.slot_len[slot] = plen
+            self.active[slot] = r
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        logits = logits[:self.arch.vocab_size].astype(jnp.float32)
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(int(time.time_ns()) & 0x7FFFFFFF)
+        return int(jax.random.categorical(key, logits / temperature))
+
+    def step(self) -> int:
+        """One engine tick: admit + decode one token for all active slots."""
+        self._admit()
+        if not self.active:
+            return 0
+        # uniform position: engine cache pos = max slot len (slots padded)
+        self.cache["pos"] = jnp.asarray(int(self.slot_len.max()), jnp.int32)
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for slot, r in self.active.items():
+            last[slot, 0] = r.out_tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": jnp.asarray(last)})
+        finished = []
+        for slot, r in list(self.active.items()):
+            tok = self._sample(logits[slot], r.temperature)
+            r.out_tokens.append(int(tok))
+            self.slot_len[slot] += 1
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                r.t_done = time.time()
+                finished.append(r)
+                self.finished.append(r)
+                del self.active[slot]
+                self.free_slots.append(slot)
+                self.slot_len[slot] = 0
+        return len(finished)
+
+    def run_until_idle(self, max_ticks: int = 1000) -> List[Request]:
+        ticks = 0
+        while (self.pending or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

@@ -1,0 +1,2 @@
+from repro.train.trainer import Trainer, TrainerConfig
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,17 @@
+import os
+import sys
+from pathlib import Path
+
+# tests are run as `PYTHONPATH=src pytest tests/`; make that robust even
+# when invoked from elsewhere
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# smoke tests must see the single real CPU device (the dry-run sets its
+# own 512-device flag in its own subprocess)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,170 @@
+"""The specialization flow: pass invariants, plan artifact, ablation."""
+
+import math
+
+import pytest
+
+from repro.configs import all_archs, get_arch, get_shape
+from repro.core import MemoryPlan, specialize
+from repro.core.costmodel import MeshModel
+from repro.core.describe import describe_program
+from repro.core.ir import Role
+from repro.core.passes import (CommunicationPass, DataOrganizationPass,
+                               LayoutPass, LocalPartitioningPass)
+from repro.hw import get_target
+
+MESHES = [
+    (("data", "model"), (16, 16)),
+    (("pod", "data", "model"), (2, 16, 16)),
+]
+
+
+def _spec_factor(spec, sizes):
+    f = 1
+    for s in spec:
+        if s is None:
+            continue
+        for n in ((s,) if isinstance(s, str) else s):
+            f *= sizes[n]
+    return f
+
+
+@pytest.mark.parametrize("axes,shape", MESHES)
+@pytest.mark.parametrize("arch", ["qwen3-8b", "llama4-maverick-400b-a17b",
+                                  "mamba2-2.7b", "hymba-1.5b"])
+def test_specialize_invariants(arch, axes, shape):
+    plan = specialize(arch, "train_4k", mesh_axes=axes, mesh_shape=shape)
+    sizes = dict(zip(axes, shape))
+    ir = describe_program(get_arch(arch), get_shape("train_4k"))
+
+    # every placement spec divides its tensor's dims
+    for name, p in plan.placements.items():
+        t = ir.tensors.get(name)
+        if t is None or not p.spec:
+            continue
+        used = set()
+        for dim, s in zip(t.shape, p.spec):
+            if s is None:
+                continue
+            names = (s,) if isinstance(s, str) else tuple(s)
+            for n in names:
+                assert n not in used, f"{name}: axis {n} used twice"
+                used.add(n)
+            f = math.prod(sizes[n] for n in names)
+            assert dim % f == 0, (name, t.shape, p.spec)
+
+    # persistent state obeys the HBM budget
+    tgt = get_target(plan.target)
+    assert plan.estimates["persistent_bytes_per_dev"] <= \
+        0.70 * tgt.hbm_bytes + 1
+
+    # every pass left a decision trail
+    passes = {entry[0] for entry in plan.log}
+    assert {"data_organization", "layout", "communication",
+            "local_partitioning"} <= passes
+
+    # VMEM budget respected by every kernel partition (2 banks)
+    for bp in plan.partitions.values():
+        assert bp.n_buffers * bp.vmem_bytes <= tgt.vmem_bytes
+
+
+def test_plan_json_roundtrip():
+    plan = specialize("qwen2-vl-72b", "decode_32k")
+    rt = MemoryPlan.from_json(plan.to_json())
+    assert rt.arch == plan.arch
+    assert rt.axis_rules.keys() == plan.axis_rules.keys()
+    assert rt.comm.grad_schedule == plan.comm.grad_schedule
+    assert set(rt.partitions) == set(plan.partitions)
+    assert rt.placements["cache.k"].spec == plan.placements["cache.k"].spec
+
+
+def test_pass_ablation_prefix():
+    """Running a prefix of the flow yields progressively refined plans."""
+    full = specialize("qwen3-8b", "train_4k")
+    only_do = specialize("qwen3-8b", "train_4k",
+                         passes=[DataOrganizationPass])
+    no_part = specialize("qwen3-8b", "train_4k",
+                         passes=[DataOrganizationPass, LayoutPass,
+                                 CommunicationPass])
+    assert not only_do.partitions and full.partitions
+    assert only_do.comm.grad_schedule == "reduce_scatter"  # default untouched
+    assert not no_part.partitions
+    assert no_part.comm.remat_policy == full.comm.remat_policy
+
+
+def test_opt_state_ladder_multi_pod_relaxes():
+    one = specialize("llama4-maverick-400b-a17b", "train_4k")
+    two = specialize("llama4-maverick-400b-a17b", "train_4k",
+                     mesh_axes=("pod", "data", "model"),
+                     mesh_shape=(2, 16, 16))
+    # 1 pod must cut optimizer precision; 2 pods have room for fp32
+    assert one.opt["moment_dtype"] == "bfloat16"
+    assert not one.opt["master_weights"]
+    assert two.opt["moment_dtype"] == "float32"
+    assert two.opt["master_weights"]
+
+
+def test_pod_axis_enables_compression():
+    two = specialize("qwen3-8b", "train_4k",
+                     mesh_axes=("pod", "data", "model"),
+                     mesh_shape=(2, 16, 16))
+    one = specialize("qwen3-8b", "train_4k")
+    assert two.comm.compress_pod_grads
+    assert not one.comm.compress_pod_grads
+    # template records the channel decisions
+    assert two.template_summary["components"]["channel.dcn"]["enabled"]
+    assert not one.template_summary["components"]["channel.dcn"]["enabled"]
+
+
+def test_head_padding_decisions():
+    # decode keeps megatron_tp -> heads must be TP-expressible
+    plan = specialize("hymba-1.5b", "decode_32k")
+    assert plan.estimates["heads_padded"] == 32     # 25 -> 32
+    assert plan.estimates["kv_heads_padded"] == 8   # 5 -> 8
+    plan2 = specialize("deepseek-coder-33b", "decode_32k")
+    assert plan2.estimates["heads_padded"] == 64    # 56 -> 64
+    plan3 = specialize("qwen3-8b", "decode_32k")
+    assert plan3.estimates["heads_padded"] == 32    # unchanged
+    # fsdp_dp training keeps heads whole (no padding waste)
+    plan4 = specialize("hymba-1.5b", "train_4k")
+    if plan4.estimates.get("strategy") == "fsdp_dp":
+        assert plan4.estimates["heads_padded"] == 25
+
+
+def test_strategy_decision():
+    """Weight-dominated archs keep TP; activation-dominated go FSDP-DP."""
+    assert specialize("qwen3-8b", "train_4k").estimates["strategy"] \
+        == "fsdp_dp"
+    assert specialize("llama4-maverick-400b-a17b", "train_4k") \
+        .estimates["strategy"] == "megatron_tp"
+    assert specialize("qwen3-8b", "decode_32k").estimates["strategy"] \
+        == "megatron_tp"
+
+
+def test_moe_impl_decision():
+    assert specialize("granite-moe-1b-a400m", "train_4k") \
+        .estimates["moe_impl"] == "dense_einsum"     # 8-of-32, tiny ff
+    assert specialize("llama4-maverick-400b-a17b", "train_4k") \
+        .estimates["moe_impl"] == "gshard_einsum"    # 1-of-128
+
+
+def test_cache_sharding_spill():
+    # default decode impl is shard_map flash-decode -> seq dim sharded
+    plan = specialize("qwen2-vl-72b", "decode_32k")
+    assert plan.placements["cache.k"].spec[2] == "model"   # seq_kv
+    assert plan.estimates["decode_impl"] == "shard_map_flash"
+    # the XLA-automatic fallback shards head_dim (local append)
+    plan2 = specialize("qwen2-vl-72b", "decode_32k", decode_impl="xla")
+    assert plan2.placements["cache.k"].spec[-1] == "model"
+
+
+def test_ir_describe_all_cells():
+    for arch in all_archs():
+        a = get_arch(arch)
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            if a.is_encoder and s == "decode_32k":
+                continue
+            ir = describe_program(a, get_shape(s))
+            ir.validate()
+            assert ir.total_flops() > 0
+            assert ir.by_role(Role.PARAM)

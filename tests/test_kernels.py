@@ -1,0 +1,117 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.tiled_matmul import tiled_matmul
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 4, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 32)])
+def test_flash_attention(B, S, H, K, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D)).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=64, block_kv=64, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert _rel_err(o, r) < tol
+
+
+@pytest.mark.parametrize("blocks", [(32, 128), (128, 32), (64, 64)])
+def test_flash_attention_block_invariance(blocks):
+    """Output must not depend on the partitioning-pass tile choice."""
+    bq, bkv = blocks
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    o = flash_attention(q, k, v, block_q=bq, block_kv=bkv, interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    assert _rel_err(o, r) < 1e-5
+
+
+@pytest.mark.parametrize("S,cl,window", [(256, 256, 0), (256, 100, 0),
+                                         (512, 300, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(S, cl, window, dtype):
+    B, H, K, D = 2, 8, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D)).astype(dtype)
+    o = decode_attention(q, k, v, cache_len=jnp.int32(cl), window=window,
+                         block_kv=64, interpret=True)
+    r = ref.decode_attention_ref(q, k, v, cache_len=jnp.int32(cl),
+                                 window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert _rel_err(o, r) < tol
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 96, 2, 64, 32, 32),   # S not a multiple of 2*chunk
+])
+def test_ssd_scan(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, _ = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    assert _rel_err(y, yr) < 1e-3
+
+
+@pytest.mark.parametrize("M,K,N,bm,bk,bn", [
+    (128, 256, 128, 64, 128, 64),
+    (256, 128, 512, 128, 64, 128),
+    (64, 64, 64, 64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tiled_matmul(M, K, N, bm, bk, bn, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    a = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    b = jax.random.normal(ks[1], (K, N)).astype(dtype)
+    o = tiled_matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=True)
+    r = ref.tiled_matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert _rel_err(o, r) < tol
+
+
+def test_ops_dispatch_uses_plan_blocks():
+    """ops.py must configure kernels from the plan's BlockPlans."""
+    from repro.core import specialize
+    from repro.kernels import ops
+    plan = specialize("qwen3-8b", "train_4k")
+    bp = plan.partitions["flash_attention"]
+    assert bp.blocks["block_q"] >= 128
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    S = bp.blocks["block_q"]            # single block
+    q = jax.random.normal(ks[0], (1, S, 4, 128)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, S, 2, 128)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, S, 2, 128)).astype(jnp.bfloat16)
+    o = ops.flash_attention(q, k, v, plan=plan, interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    assert _rel_err(o, r) < 2e-2

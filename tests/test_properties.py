@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.costmodel import (MeshModel, allgather_bytes, allreduce_bytes,
+                                  reduce_scatter_bytes)
+from repro.dist.collectives import dequantize_int8, ef_compress, quantize_int8
+from repro.dist.sharding import resolve_pspec
+from repro.models.moe import _capacity
+
+
+AXIS_NAMES = st.sampled_from([None, "batch", "embed", "heads", "ff", "vocab"])
+RULES = {"batch": "data", "embed": None, "heads": "model", "ff": "model",
+         "vocab": "model"}
+SIZES = {"data": 16, "model": 16}
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.data())
+@settings(max_examples=200, deadline=None)
+def test_resolve_pspec_always_divides(shape, data):
+    axes = tuple(data.draw(AXIS_NAMES) for _ in shape)
+    spec = resolve_pspec(RULES, shape, axes, SIZES)
+    used = set()
+    for dim, s in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if s is None:
+            continue
+        names = (s,) if isinstance(s, str) else tuple(s)
+        f = 1
+        for n in names:
+            assert n not in used          # a mesh axis shards one dim only
+            used.add(n)
+            f *= SIZES[n]
+        assert dim % f == 0               # divisibility repair worked
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=1, max_size=2048))
+@settings(max_examples=100, deadline=None)
+def test_int8_quantization_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s, pad = quantize_int8(x)
+    xr = dequantize_int8(q, s, pad, x.shape)
+    # per-block error bounded by scale/2 = amax/254
+    blocks = np.asarray(jnp.abs(x)).reshape(-1)
+    bound = max(blocks.max() / 254.0, 1e-6) * 1.001
+    assert float(jnp.abs(xr - x).max()) <= bound + 1e-6
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=8, max_size=256),
+       st.integers(2, 10))
+@settings(max_examples=50, deadline=None)
+def test_error_feedback_preserves_sum(vals, steps):
+    """Sum of delivered values + residual == sum of inputs (unbiasedness)."""
+    x = jnp.asarray(np.array(vals, np.float32))
+    err = None
+    delivered = jnp.zeros_like(x)
+    for _ in range(steps):
+        xh, err = ef_compress(x, err)
+        delivered = delivered + xh
+    total_in = float(jnp.sum(x)) * steps
+    total_out = float(jnp.sum(delivered)) + float(jnp.sum(
+        err.astype(jnp.float32)))
+    scale = max(abs(total_in), 1.0)
+    assert abs(total_in - total_out) / scale < 0.02
+
+
+@given(st.integers(1, 100_000), st.integers(2, 64))
+@settings(max_examples=100, deadline=None)
+def test_ring_collective_inequalities(nbytes, n):
+    ar = allreduce_bytes(nbytes, n)
+    rs = reduce_scatter_bytes(nbytes, n)
+    ag = allgather_bytes(nbytes, n)
+    assert abs(ar - (rs + ag)) < 1e-6     # AR = RS + AG (ring identity)
+    assert 0 <= rs < nbytes
+
+
+@given(st.integers(1, 65536), st.integers(1, 128), st.integers(1, 8),
+       st.floats(1.0, 2.0))
+@settings(max_examples=100, deadline=None)
+def test_moe_capacity_sane(tokens, experts, topk, cf):
+    c = _capacity(tokens, experts, topk, cf)
+    assert c >= 4 and c % 4 == 0
+    # enough capacity for a perfectly balanced router
+    assert c * experts >= min(tokens * topk, 4 * experts) * 0.99
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_mesh_model_device_count(a, b, c):
+    m = MeshModel(axes=("pod", "data", "model"), shape=(a, b, c))
+    assert m.n_devices == a * b * c
+    assert m.axis_size("data") == b
+    assert m.axis_size(None) == 1
