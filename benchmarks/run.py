@@ -35,23 +35,37 @@ import numpy as np  # noqa: E402
 
 def _time(fn, *args, n=10, warmup=2) -> float:
     """Median wall time per call, in us."""
+    us, _ = _time_keep(fn, *args, n=n, warmup=warmup)
+    return us
+
+
+def _time_keep(fn, *args, n=10, warmup=2):
+    """Median wall time per call in us, plus the last call's result
+    (so callers time a computation AND use it without re-running)."""
+    out = None
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        out = jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(n):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        out = jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return float(np.median(ts) * 1e6), out
+
+
+#: rows collected for the optional --json machine-readable dump
+ROWS: list = []
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
 # ---------------------------------------------------------------------
 def table1_specialization() -> None:
-    from repro.configs import get_arch, get_shape
+    from repro.configs import ShapeConfig, get_arch, get_shape
     from repro.core.costmodel import MeshModel, estimate_step
     from repro.core.describe import describe_program
     from repro.core.passes import (CommunicationPass, DataOrganizationPass,
@@ -59,10 +73,15 @@ def table1_specialization() -> None:
     from repro.core.pipeline import specialize
     from repro.hw import get_target
 
-    cases = [("qwen3-8b", "train_4k"),
-             ("llama4-maverick-400b-a17b", "train_4k"),
-             ("qwen2-vl-72b", "decode_32k"),
-             ("mamba2-2.7b", "long_500k")]
+    # finetune_128: small-batch TP training is collective-bound -> the
+    # communication pass switches the DP grad reduction to int8+EF and
+    # the collective_ms vs collective_raw_ms columns show the cut
+    cases = [("qwen3-8b", "train_4k", None),
+             ("qwen3-8b", "finetune_128",
+              (ShapeConfig("finetune_128", "train", 128, 8), (8, 2))),
+             ("llama4-maverick-400b-a17b", "train_4k", None),
+             ("qwen2-vl-72b", "decode_32k", None),
+             ("mamba2-2.7b", "long_500k", None)]
     stages = [
         ("data_org", [DataOrganizationPass]),
         ("+layout", [DataOrganizationPass, LayoutPass]),
@@ -70,23 +89,48 @@ def table1_specialization() -> None:
         ("full", [DataOrganizationPass, LayoutPass, CommunicationPass,
                   LocalPartitioningPass]),
     ]
-    mesh = MeshModel(axes=("data", "model"), shape=(16, 16))
+    default_mesh = MeshModel(axes=("data", "model"), shape=(16, 16))
     tgt = get_target()
-    for arch, shape in cases:
-        ir = describe_program(get_arch(arch), get_shape(shape))
+    for arch, shape_name, custom in cases:
+        shape_cfg = get_shape(shape_name) if custom is None else custom[0]
+        mesh_shape = (16, 16) if custom is None else custom[1]
+        mesh = MeshModel(axes=("data", "model"), shape=mesh_shape) \
+            if custom is not None else default_mesh
+        ir = describe_program(get_arch(arch), shape_cfg)
         for label, passes in stages:
-            us = _time(lambda: specialize(arch, shape, passes=passes),
-                       n=5, warmup=1)
-            plan = specialize(arch, shape, passes=passes)
+            # time the flow itself (cache=False) and KEEP the timed
+            # result instead of running specialize() a second time
+            us, plan = _time_keep(
+                lambda: specialize(arch, shape_cfg, passes=passes,
+                                   mesh_shape=mesh_shape, cache=False),
+                n=5, warmup=1)
+            training = shape_cfg.kind == "train"
+            schedule = (plan.comm.grad_schedule
+                        if plan.comm.grad_schedule != "none"
+                        else "reduce_scatter")
             est = estimate_step(
-                ir, plan.axis_rules, mesh, tgt,
-                training=shape == "train_4k",
-                grad_schedule=(plan.comm.grad_schedule
-                               if plan.comm.grad_schedule != "none"
-                               else "reduce_scatter"))
-            emit(f"specialize/{arch}@{shape}/{label}", us,
+                ir, plan.axis_rules, mesh, tgt, training=training,
+                grad_schedule=schedule,
+                grad_bits=8 if plan.comm.compresses_gradients else None)
+            est_raw = estimate_step(
+                ir, plan.axis_rules, mesh, tgt, training=training,
+                grad_schedule=schedule)
+            grad_comm = "none" if not training else (
+                f"{schedule}+int8_ef" if plan.comm.compresses_gradients
+                else schedule)
+            emit(f"specialize/{arch}@{shape_name}/{label}", us,
                  f"modeled_step_ms={est.step_time_overlap*1e3:.1f};"
-                 f"bound={est.bound}")
+                 f"bound={est.bound};grad_comm={grad_comm};"
+                 f"collective_ms={est.collective_s*1e3:.2f};"
+                 f"collective_raw_ms={est_raw.collective_s*1e3:.2f}")
+    # the plan cache in action: repeated full-flow calls are memoized
+    from repro.core.pipeline import clear_plan_cache
+    clear_plan_cache()
+    arch, shape_name, _ = cases[0]
+    specialize(arch, shape_name)                  # warm the cache
+    us = _time(lambda: specialize(arch, shape_name), n=5, warmup=1)
+    emit(f"specialize/{arch}@{shape_name}/cache_hit", us,
+         "memoized full flow (deep-copied plan)")
 
 
 # ---------------------------------------------------------------------
@@ -200,12 +244,19 @@ TABLES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this path (e.g. "
+                         "BENCH_table1.json) for the perf trajectory")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():
         if args.only and args.only != name:
             continue
         fn()
+    if args.json:
+        import json
+        Path(args.json).write_text(json.dumps(ROWS, indent=2) + "\n")
+        print(f"# wrote {len(ROWS)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 gate + benchmark smoke.
+#
+# Catches both functional regressions and *collection-time* breakage
+# (e.g. a module importing a package that does not exist yet — the
+# failure mode that once shipped with a missing repro.dist).
+#
+#   scripts/ci.sh            # full tier-1 + table1 smoke
+#   scripts/ci.sh --fast     # tier-1 only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== smoke: benchmarks table1 (+ machine-readable rows) =="
+    mkdir -p results
+    python -m benchmarks.run --only table1 --json results/BENCH_table1.json
+fi
+
+echo "CI OK"

@@ -1,0 +1,21 @@
+"""jax version-compatibility shims (import for side effects).
+
+The tree targets the stable ``jax.shard_map`` spelling with the
+``check_vma`` kwarg; on jax < 0.5 that API lives under
+``jax.experimental.shard_map`` and the kwarg is named ``check_rep``.
+Importing this module installs a translating alias once.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "shard_map"):  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, *args, **kwargs)
+
+    jax.shard_map = _compat_shard_map

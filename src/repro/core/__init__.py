@@ -17,13 +17,15 @@ from repro.core.ir import (
     Role,
     TensorDecl,
 )
-from repro.core.pipeline import PassPipeline, specialize
+from repro.core.pipeline import (PassPipeline, clear_plan_cache,
+                                 plan_cache_stats, specialize)
 from repro.core.plan import BlockPlan, CommPlan, MemoryPlan, Placement
 from repro.core.template import Component, ComponentKind, MemoryTemplate
 
 __all__ = [
     "AccessPattern", "Lifetime", "MemorySpace", "OpDecl", "OpKind",
     "ProgramIR", "Reuse", "Role", "TensorDecl", "PassPipeline", "specialize",
+    "clear_plan_cache", "plan_cache_stats",
     "BlockPlan", "CommPlan", "MemoryPlan", "Placement", "Component",
     "ComponentKind", "MemoryTemplate",
 ]

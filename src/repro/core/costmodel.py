@@ -108,6 +108,17 @@ def all_to_all_bytes(nbytes_local: int, n: int) -> float:
     return nbytes_local * (n - 1) / n
 
 
+def compressed_ratio(bits: int = 8, dtype_bytes: int = 2,
+                     block: int = 128) -> float:
+    """Wire-volume ratio of block-quantized vs raw gradient collectives.
+
+    int8 codes plus one f32 scale per ``block`` values: for bf16 grads
+    (the IR's gradient dtype) int8 halves the volume; for f32 it is ~4x.
+    Matches :func:`repro.dist.collectives.quantize_int8`'s layout.
+    """
+    return (bits / 8.0 + 4.0 / block) / dtype_bytes
+
+
 @dataclasses.dataclass
 class StepCost:
     """Three-term roofline estimate for one step on one device."""
@@ -143,6 +154,7 @@ def estimate_step(
     training: bool = True,
     grad_schedule: str = "reduce_scatter",
     dp_axes: Sequence[str] = ("data",),
+    grad_bits: Optional[int] = None,
 ) -> StepCost:
     """Static three-term estimate of one train/serve step.
 
@@ -184,6 +196,8 @@ def estimate_step(
             coll_bytes += reduce_scatter_bytes(grad_bytes, dp) + allgather_bytes(
                 grad_bytes, dp
             )
+        if grad_bits:  # int8(+scales) compression of the grad reduction
+            coll_bytes *= compressed_ratio(grad_bits)
     collective_s = coll_bytes / target.ici_link_bw
 
     return StepCost(compute_s=compute_s, memory_s=memory_s,

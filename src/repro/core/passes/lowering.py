@@ -133,7 +133,7 @@ def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
     cfg = build_run_cfg(plan, arch, mesh)
     opt_cfg = opt_cfg or adamw.OptConfig.from_plan(plan)
     nmicro = max(plan.comm.microbatches, 1)
-    compress = plan.comm.compress_pod_grads
+    compress = plan.comm.compresses_gradients
 
     pshapes = lm.param_shapes(arch, *_padded(plan))
     ppspecs = _param_pspecs(plan, arch, sizes)

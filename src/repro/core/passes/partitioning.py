@@ -58,31 +58,46 @@ class LocalPartitioningPass(Pass):
         arch, mesh = ctx.arch, ctx.mesh
         hd = arch.hd
         seq = ctx.shape.seq_len
-        # start from the biggest MXU-aligned q tile and shrink to fit
-        block_q, block_kv = 512, 1024
-        while attention_tile_bytes(block_q, block_kv, hd) * 2 > budget:
-            if block_kv > 128:
-                block_kv //= 2
-            elif block_q > 128:
+        # start from the biggest MXU-aligned q tile and shrink to fit.
+        # Causal workloads get SQUARE tiles: the kernel's packed-causal
+        # grid (which skips the above-diagonal kv blocks, ~2x fewer
+        # steps at long S) only engages when block_q == block_kv.
+        if arch.causal:
+            block_q = block_kv = 512
+            while attention_tile_bytes(block_q, block_kv, hd) * 2 > budget \
+                    and block_q > 128:
                 block_q //= 2
-            else:
-                break
+                block_kv //= 2
+        else:
+            block_q, block_kv = 512, 1024
+            while attention_tile_bytes(block_q, block_kv, hd) * 2 > budget:
+                if block_kv > 128:
+                    block_kv //= 2
+                elif block_q > 128:
+                    block_q //= 2
+                else:
+                    break
         block_q = min(block_q, _align_down(seq, 128))
         block_kv = min(block_kv, _align_down(seq, 128))
         vm = attention_tile_bytes(block_q, block_kv, hd)
+        packed = arch.causal and block_q == block_kv
         bp = BlockPlan(
             kernel="flash_attention",
             blocks={"block_q": block_q, "block_kv": block_kv, "head_dim": hd},
             n_buffers=2,
             vmem_bytes=vm,
-            grid_note=f"grid=(heads/TP, seq/{block_q}); kv streamed in "
-                      f"{block_kv}-row banks, 2-deep pipeline",
+            grid_note=("packed-causal grid=(heads/TP, ceil(n/2), n+1), "
+                       f"n=seq/{block_q}; above-diagonal kv blocks pruned"
+                       if packed else
+                       f"grid=(heads/TP, seq/{block_q}); kv streamed in "
+                       f"{block_kv}-row banks, 2-deep pipeline"),
         )
         ctx.plan.partitions[bp.kernel] = bp
         ctx.template["plm.attention"].refine(
             self.name, **bp.blocks, n_buffers=2, vmem_bytes=vm)
         self.record(ctx, "flash_attention",
-                    f"block_q={block_q} block_kv={block_kv}",
+                    f"block_q={block_q} block_kv={block_kv}"
+                    + (" (square: packed-causal grid)" if packed else ""),
                     f"2-bank working set {2*vm/2**20:.1f} MiB <= "
                     f"budget {budget/2**20:.0f} MiB; tiles MXU-aligned")
 

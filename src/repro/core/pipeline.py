@@ -10,7 +10,8 @@ lives in :mod:`repro.core.passes.lowering` and consumes only the plan.
 
 from __future__ import annotations
 
-from typing import Iterable, Optional, Sequence, Tuple, Type
+import copy
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Type
 
 from repro.configs.base import ArchConfig, ShapeConfig, get_arch, get_shape
 from repro.core.costmodel import MeshModel
@@ -33,6 +34,26 @@ class PassPipeline:
         return ctx.plan
 
 
+# ---------------------------------------------------------------------
+# plan cache: the flow is deterministic in (arch, shape, mesh, target,
+# passes, options), so repeated callers (benchmarks, serve engine,
+# trainer restarts) can skip redundant pipeline runs.  Entries and hits
+# are deep-copied: returned plans are caller-owned and mutation-safe.
+# ---------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Any, MemoryPlan] = {}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS.update(hits=0, misses=0)
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return {**_PLAN_CACHE_STATS, "size": len(_PLAN_CACHE)}
+
+
 def specialize(
     arch: str | ArchConfig,
     shape: str | ShapeConfig,
@@ -41,11 +62,26 @@ def specialize(
     target: str = "tpu-v5e",
     passes: Optional[Sequence[Type[Pass]]] = None,
     use_pallas: str = "auto",
+    cache: bool = True,
     **options,
 ) -> MemoryPlan:
-    """Run the full specialization flow; returns the MemoryPlan."""
+    """Run the full specialization flow; returns the MemoryPlan.
+
+    Memoized on the full argument tuple (``cache=False`` bypasses both
+    lookup and insertion — e.g. when benchmarking the flow itself).
+    """
     arch_cfg = get_arch(arch) if isinstance(arch, str) else arch
     shape_cfg = get_shape(shape) if isinstance(shape, str) else shape
+    key = None
+    if cache:
+        key = (arch_cfg, shape_cfg, tuple(mesh_axes), tuple(mesh_shape),
+               target, None if passes is None else tuple(passes), use_pallas,
+               tuple(sorted((k, repr(v)) for k, v in options.items())))
+        hit = _PLAN_CACHE.get(key)
+        if hit is not None:
+            _PLAN_CACHE_STATS["hits"] += 1
+            return copy.deepcopy(hit)
+        _PLAN_CACHE_STATS["misses"] += 1
     ir = describe_program(arch_cfg, shape_cfg)
     mesh = MeshModel(axes=tuple(mesh_axes), shape=tuple(mesh_shape))
     template = MemoryTemplate.default(target)
@@ -60,4 +96,7 @@ def specialize(
     ctx = PassContext(arch=arch_cfg, shape=shape_cfg, ir=ir, mesh=mesh,
                       template=template, plan=plan, options=dict(options))
     pipeline = PassPipeline(passes if passes is not None else DEFAULT_PASSES)
-    return pipeline.run(ctx)
+    result = pipeline.run(ctx)
+    if key is not None:
+        _PLAN_CACHE[key] = copy.deepcopy(result)
+    return result

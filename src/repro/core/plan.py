@@ -50,6 +50,7 @@ class CommPlan:
 
     grad_schedule: str = "reduce_scatter"     # or "all_reduce"
     compress_pod_grads: bool = False          # int8+error-feedback on DCN axis
+    compress_grads: bool = False              # int8+EF on the full DP reduction
     compress_bits: int = 8
     microbatches: int = 1                     # grad-accum for comm overlap
     prefetch_depth: int = 2                   # host input pipeline depth
@@ -57,6 +58,11 @@ class CommPlan:
     remat_policy: str = "none"                # none|dots|full
     donate_state: bool = True                 # buffer sharing (disjoint lifetimes)
     notes: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def compresses_gradients(self) -> bool:
+        """Any EF-compressed gradient path on (lowering adds an EF state)."""
+        return self.compress_pod_grads or self.compress_grads
 
 
 @dataclasses.dataclass

@@ -1,0 +1,99 @@
+"""Compressed collectives: int8 block quantization + error feedback.
+
+The communication pass turns these on when a gradient reduction is the
+step bottleneck (slow DCN "pod" axis, or a collective-bound step on the
+ICI mesh).  The math contract, verified by the property tests:
+
+* ``quantize_int8`` is block-wise symmetric: per 128-element block the
+  reconstruction error is bounded by ``amax_block / 254`` (half a
+  quantization step);
+* ``ef_compress`` is *unbiased over time*: the residual carries exactly
+  what quantization dropped, so ``sum(delivered) + residual ==
+  sum(inputs)`` (telescoping) and the time-averaged delivered gradient
+  converges to the true gradient;
+* ``compressed_psum`` is a mean-reduction (gradient-averaging semantics)
+  of the *dequantized* values, returning the local residual for feedback.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: quantization block: one f32 scale per 128 values (~3% volume overhead)
+BLOCK = 128
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK
+                  ) -> Tuple[jax.Array, jax.Array, int]:
+    """Block-wise symmetric int8 quantization of an arbitrary-shape array.
+
+    Returns ``(q, scales, pad)``: int8 codes of shape
+    ``(nblocks, block)``, one f32 scale per block, and the number of
+    zero-padded tail elements (non-multiple shapes pad up).
+    """
+    flat = jnp.asarray(x).astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], pad
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, pad: int,
+                    shape: Tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`quantize_int8` (f32 output of ``shape``)."""
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def ef_compress(g: jax.Array, err: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback compression of one gradient leaf.
+
+    ``ghat = Q(g + err)``; the new residual ``(g + err) - ghat`` is what
+    the quantizer dropped this step and is re-injected next step, making
+    the compression unbiased over time.  ``err=None`` starts a fresh
+    residual; otherwise the residual keeps its storage dtype (the plan
+    stores it bf16 — half the optimizer-state cost of an f32 residual).
+    """
+    g32 = g.astype(jnp.float32)
+    acc = g32 if err is None else g32 + err.astype(jnp.float32)
+    q, scales, pad = quantize_int8(acc)
+    ghat = dequantize_int8(q, scales, pad, g.shape)
+    new_err = (acc - ghat).astype(jnp.float32 if err is None else err.dtype)
+    return ghat.astype(g.dtype), new_err
+
+
+def ef_state(params) -> dict:
+    """Zero-initialized error-feedback residuals, one per parameter leaf.
+
+    bf16 storage: the residual is bounded by half a quantization step, so
+    bf16's ~3 significant digits lose <0.5% of an already-small term.
+    """
+    return jax.tree.map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.bfloat16), params)
+
+
+def compressed_psum(x: jax.Array, axis) -> Tuple[jax.Array, jax.Array]:
+    """Mean all-reduce of int8-quantized values, for use under shard_map.
+
+    Each shard quantizes locally, the *dequantized* values are averaged
+    over ``axis``, and the local quantization error is returned so the
+    caller can feed it back (:func:`ef_compress` semantics split across
+    shards).  Wire-volume model: int8 codes + one f32 scale per block =
+    ~``(bits/8 + 4/128)`` bytes/element vs 2 (bf16) or 4 (f32).
+    """
+    q, scales, pad = quantize_int8(x)
+    xq = dequantize_int8(q, scales, pad, jnp.shape(x))
+    err = (jnp.asarray(x, jnp.float32) - xq).astype(x.dtype)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    y = jax.lax.psum(xq, axis) / n
+    return y.astype(x.dtype), err

@@ -1,0 +1,132 @@
+"""shard_map flash-decode over a sequence-sharded KV cache.
+
+The data-organization pass spills the cache's *seq* dim onto the model
+axis when kv_heads are not shardable (GQA kv=8 on a 16-wide TP axis).
+Decode then needs two things XLA's automatic partitioner does badly on a
+seq-sharded cache:
+
+1. the one-token append — a dynamic-update-slice at a runtime offset on
+   a sharded dim lowers to a gather; here only the *owning* shard writes,
+   locally;
+2. the attention reduction — each shard computes a partial online
+   softmax ``(m, l, acc)`` over its seq slice and the three terms are
+   combined across the model axis (one pmax + two psums of tiny
+   per-query tensors instead of gathering the cache).
+
+Semantics match :func:`repro.kernels.ref.decode_attention_ref` with
+``cache_len = pos + 1``; ``pos`` and ``window`` may be traced scalars.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat as _compat  # noqa: F401  (jax.shard_map alias)
+from repro.dist.sharding import mesh_sizes
+
+NEG_INF = -1e30
+
+
+def _append(cache: jax.Array, new: jax.Array, idx: jax.Array,
+            in_range) -> jax.Array:
+    """Write ``new`` at seq offset ``idx`` iff ``in_range`` (else no-op)."""
+    upd = jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), idx, axis=1)
+    return jnp.where(in_range, upd, cache)
+
+
+def _partial_attend(q: jax.Array, kc: jax.Array, vc: jax.Array,
+                    kpos: jax.Array, pos: jax.Array, window: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax partial terms (m, l, acc) over one seq slice.
+
+    ``kpos`` holds the slice's *global* positions, so the causal/window
+    mask is exact on every shard; fully-masked shards contribute weight
+    ``exp(NEG_INF - m_global) == 0`` in the combine.
+    """
+    B, _, H, D = q.shape
+    K = kc.shape[2]
+    G = H // K
+    qh = q[:, 0].reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, kc.astype(jnp.float32))
+    valid = kpos <= pos
+    valid &= jnp.where(window > 0, (pos - kpos) < window, True)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+    return m, l, acc
+
+
+def _finish(q: jax.Array, l: jax.Array, acc: jax.Array) -> jax.Array:
+    B, _, H, D = q.shape
+    ctx = acc / jnp.maximum(l, 1e-30)[..., None]
+    return ctx.reshape(B, H, D)[:, None].astype(q.dtype)
+
+
+def flash_decode(q: jax.Array,            # (B, 1, H, D)
+                 k_new: jax.Array,        # (B, 1, K, D)
+                 v_new: jax.Array,        # (B, 1, K, D)
+                 k_cache: jax.Array,      # (B, S, K, D)
+                 v_cache: jax.Array,      # (B, S, K, D)
+                 pos,                     # scalar int: append offset
+                 window=0,                # scalar int: 0 = full attention
+                 *,
+                 mesh: jax.sharding.Mesh,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 model_axis: str = "model",
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a (batch, seq)-sharded cache.
+
+    Returns ``(ctx, k_cache', v_cache')`` with ``ctx`` of shape
+    ``(B, 1, H, D)``.  Falls back to an unsharded single-shard path when
+    the model axis cannot shard the seq dim (size 1 or non-divisible).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    sizes = mesh_sizes(mesh)
+    msize = sizes.get(model_axis, 1)
+    B, S = k_cache.shape[0], k_cache.shape[1]
+
+    if msize <= 1 or S % msize != 0:
+        kc = _append(k_cache, k_new, pos, True)
+        vc = _append(v_cache, v_new, pos, True)
+        m, l, acc = _partial_attend(q, kc, vc, jnp.arange(S), pos, window)
+        return _finish(q, l, acc), kc, vc
+
+    dnames = tuple(a for a in data_axes if a in sizes)
+    import math
+    dsize = math.prod(sizes[a] for a in dnames)
+    bspec = None
+    if dsize > 1 and B % dsize == 0:
+        bspec = dnames[0] if len(dnames) == 1 else dnames
+
+    def local_fn(q, kn, vn, kc, vc, pos, window):
+        Sl = kc.shape[1]
+        start = jax.lax.axis_index(model_axis).astype(jnp.int32) * Sl
+        lp = pos - start
+        in_range = (lp >= 0) & (lp < Sl)
+        kc = _append(kc, kn, jnp.clip(lp, 0, Sl - 1), in_range)
+        vc = _append(vc, vn, jnp.clip(lp, 0, Sl - 1), in_range)
+        kpos = start + jnp.arange(Sl)
+        m, l, acc = _partial_attend(q, kc, vc, kpos, pos, window)
+        m_glob = jax.lax.pmax(m, model_axis)
+        coef = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * coef, model_axis)
+        acc_glob = jax.lax.psum(acc * coef[..., None], model_axis)
+        return _finish(q, l_glob, acc_glob), kc, vc
+
+    rep = P(bspec, None, None, None)
+    shd = P(bspec, model_axis, None, None)
+    # check_vma=False: the combine provably replicates ctx across the
+    # model axis (psum/pmax), no need for the static replication checker
+    # (repro.compat translates the kwarg for jax < 0.5)
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(rep, rep, rep, shd, shd, P(), P()),
+                       out_specs=(rep, shd, shd), check_vma=False)
+    return fn(q, k_new, v_new, k_cache, v_cache, pos, window)

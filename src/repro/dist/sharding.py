@@ -1,0 +1,110 @@
+"""Sharding resolution: logical axis rules -> PartitionSpecs.
+
+This is the runtime mirror of ``DataOrganizationPass._resolve``: the pass
+repairs the *IR*'s placements; these helpers apply the same two rules to
+*runtime* pytrees (params, inputs, caches) whose shapes may differ from
+the IR (padded heads/vocab, reduced smoke configs):
+
+1. divisibility repair — an assignment that does not divide the dim is
+   dropped (the tensor stays replicated on that dim);
+2. uniqueness — a mesh axis may shard at most one dim of a tensor (first
+   dim wins, matching the pass).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def mesh_sizes(mesh: Any) -> Dict[str, int]:
+    """``{axis_name: size}`` for a jax Mesh, a MeshModel, or a dict."""
+    if isinstance(mesh, Mapping):
+        return dict(mesh)
+    shape = getattr(mesh, "shape", None)
+    if isinstance(shape, Mapping):          # jax.sharding.Mesh
+        return dict(shape)
+    axes = getattr(mesh, "axes", None) or getattr(mesh, "axis_names", None)
+    return dict(zip(tuple(axes), tuple(shape)))
+
+
+def _names(assign: Any) -> Tuple[str, ...]:
+    if assign is None:
+        return ()
+    if isinstance(assign, str):
+        return (assign,)
+    return tuple(assign)
+
+
+def resolve_pspec(rules: Mapping[str, Any], shape: Sequence[int],
+                  axes: Sequence[Optional[str]],
+                  sizes: Mapping[str, int]) -> P:
+    """Resolve one tensor's logical axes through the plan's axis rules.
+
+    ``rules`` maps logical axis -> mesh assignment (name, tuple of names,
+    or None); ``axes`` names each dim of ``shape`` (None = never sharded);
+    ``sizes`` is the mesh's ``{axis: size}``.  Divisibility repair and
+    mesh-axis uniqueness are applied exactly as the data-organization
+    pass does for IR tensors.
+    """
+    entries = []
+    for dim, ax in zip(shape, axes):
+        assign = rules.get(ax) if ax is not None else None
+        names = tuple(n for n in _names(assign) if n in sizes)
+        if not names:
+            entries.append(None)
+            continue
+        factor = math.prod(sizes[n] for n in names)
+        entries.append(names if factor and dim % factor == 0 else None)
+    seen: set = set()
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+            continue
+        keep = tuple(n for n in e if n not in seen)
+        seen.update(keep)
+        out.append(keep[0] if len(keep) == 1 else (keep or None))
+    return P(*out)
+
+
+def tree_shardings(mesh: jax.sharding.Mesh, pspecs: Any) -> Any:
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+#: runtime cache pytree -> logical axes (matches core.describe's decls)
+CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "pos": (),
+    "k": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "ssm": ("layers", "batch", "ssm_heads", None, None),
+    "conv": ("layers", "batch", None, "ssm_inner"),
+}
+
+
+def cache_pspecs(plan, arch, cache_shapes: Mapping[str, Any],
+                 sizes: Mapping[str, int]) -> Dict[str, P]:
+    """PartitionSpecs for the session-cache pytree.
+
+    Starts from the plan's axis rules and overlays the per-tensor
+    placement the data-organization pass decided for ``cache.*`` (that is
+    where the seq-vs-head_dim spill for flash-decode lives), then
+    re-applies divisibility repair against the *runtime* shapes (padded
+    kv/ssm heads may differ from the IR).
+    """
+    out: Dict[str, P] = {}
+    for key, sds in cache_shapes.items():
+        axes = CACHE_AXES.get(key, tuple(None for _ in sds.shape))
+        rules = dict(plan.axis_rules)
+        placed = plan.placements.get(f"cache.{key}")
+        if placed is not None and placed.spec:
+            for ax, assign in zip(axes, placed.spec):
+                if ax is not None:
+                    rules[ax] = assign
+        out[key] = resolve_pspec(rules, sds.shape, axes, sizes)
+    return out

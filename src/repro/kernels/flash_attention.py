@@ -8,12 +8,24 @@ working set fits the VMEM budget and tile dims are MXU multiples.
 Grid: (batch·kv_head, q_blocks, kv_blocks) — kv innermost so the online
 softmax carry (m, l, acc) lives in VMEM scratch across kv steps.
 GQA is handled by loading q as (G·block_q, D) per kv head.
+
+Causal grid pruning: with ``causal=True`` the kv blocks strictly above
+the diagonal are fully masked, so computing-then-masking them wastes
+~half the grid at long S.  Pallas TPU grids are rectangular, so the
+pruned path packs the lower triangle by *pairing* q rows: row ``i`` (has
+``i+1`` valid kv blocks) shares a grid row with row ``n-1-i`` (has
+``n-i``), giving a rectangle of ``ceil(n/2) x (n+1)`` steps instead of
+``n^2`` — a ``(n+1)/2n -> 1/2`` step ratio, with bit-identical output
+(the skipped blocks contribute exactly-zero terms to the online
+softmax).  The packing needs square tiles, so it engages only when
+``block_q == block_kv`` — the partitioning pass emits square tiles for
+causal workloads; rectangular tile choices keep the full grid.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +33,33 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def kv_grid_steps(seq_len: int, block_q: int, block_kv: int, *,
+                  causal: bool = True, prune: bool = True) -> int:
+    """(q, kv) grid steps per (batch x kv_head) the kernel launches.
+
+    The pruning acceptance math: for the packed causal grid (square
+    tiles only) the ratio to the unpruned ``n^2`` grid is ``(n+1)/2n``
+    (→ 1/2 for large ``n``).
+    """
+    if causal and prune and block_q == block_kv:
+        n = seq_len // block_q
+        return ((n + 1) // 2) * (n + 1)
+    return (seq_len // block_q) * (seq_len // block_kv)
+
+
+def _mask_scores(s, q_idx, kv_idx, block_q, block_kv, G, causal, window):
+    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, G), 0).reshape(block_q * G)
+    kpos = kv_idx * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)[0]
+    mask = jnp.ones((block_q * G, block_kv), dtype=jnp.bool_)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(mask, s, NEG_INF)
 
 
 def _flash_kernel(
@@ -54,17 +93,7 @@ def _flash_kernel(
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    # positions: rows are (q_pos, g) pairs; cols are kv positions
-    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, G), 0).reshape(block_q * G)
-    kpos = kv_idx * block_kv + jax.lax.broadcasted_iota(
-        jnp.int32, (1, block_kv), 1)[0]
-    mask = jnp.ones((block_q * G, block_kv), dtype=jnp.bool_)
-    if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
-    if window > 0:
-        mask &= (qpos[:, None] - kpos[None, :]) < window
-    s = jnp.where(mask, s, NEG_INF)
+    s = _mask_scores(s, q_idx, kv_idx, block_q, block_kv, G, causal, window)
 
     m_prev = m_scr[...]
     m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -82,9 +111,113 @@ def _flash_kernel(
             block_q, G, D).astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------
+# packed-causal grid: q rows i and n-1-i share one grid row
+# ---------------------------------------------------------------------
+
+def _packed_coords(r, c, n):
+    """Grid (r, c) -> (q block i, kv block j, segment flags).
+
+    Row pair ``r``: columns ``[0, r]`` walk q row ``r`` (kv j = c);
+    columns ``[r+1, n]`` walk q row ``n-1-r`` (kv j = c - r - 1).  For
+    odd ``n`` the middle row pairs with itself — its second segment is
+    dead and must be skipped (``valid`` False).
+    """
+    seg2 = c > r
+    i = jnp.where(seg2, n - 1 - r, r)
+    j = jnp.where(seg2, c - r - 1, c)
+    valid = jnp.logical_or(jnp.logical_not(seg2), (n - 1 - r) != r)
+    seg_start = jnp.logical_or(c == 0, c == r + 1)
+    seg_end = jnp.where(seg2, c == n, c == r)
+    return i, j, valid, seg_start, seg_end
+
+
+def _flash_kernel_packed(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    window: int,
+    block: int,
+    n: int,
+    scale: float,
+):
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+    i, j, valid, seg_start, seg_end = _packed_coords(r, c, n)
+    G = q_ref.shape[2]
+    D = q_ref.shape[3]
+
+    @pl.when(valid & seg_start)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0].reshape(block * G, D).astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = _mask_scores(s, i, j, block, block, G, True, window)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(valid & seg_end)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).reshape(
+            block, G, D).astype(o_ref.dtype)
+
+
+def _flash_causal_packed(qg, kg, vg, *, window, block, S, G, D, scale,
+                         interpret):
+    BK = qg.shape[0]
+    n = S // block
+    rows = (n + 1) // 2
+    grid = (BK, rows, n + 1)
+
+    def q_index(b, r, c):
+        i, _, _, _, _ = _packed_coords(r, c, n)
+        return (b, i, 0, 0)
+
+    def kv_index(b, r, c):
+        _, j, _, _, _ = _packed_coords(r, c, n)
+        return (b, j, 0)
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel_packed, window=window, block=block, n=n,
+            scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, G, D), q_index),
+            pl.BlockSpec((1, block, D), kv_index),
+            pl.BlockSpec((1, block, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block, G, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((BK, S, G, D), qg.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block * G,), jnp.float32),
+            pltpu.VMEM((block * G,), jnp.float32),
+            pltpu.VMEM((block * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret",
+                     "prune"))
 def flash_attention(
     q: jax.Array,              # (B, S, H, D)
     k: jax.Array,              # (B, S, K, D)
@@ -95,6 +228,7 @@ def flash_attention(
     block_q: int = 512,
     block_kv: int = 1024,
     interpret: bool = False,
+    prune: bool = True,
 ) -> jax.Array:
     B, S, H, D = q.shape
     K = k.shape[2]
@@ -110,25 +244,31 @@ def flash_attention(
     kg = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
     vg = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
 
-    grid = (B * K, S // block_q, S // block_kv)
-    out = pl.pallas_call(
-        functools.partial(
-            _flash_kernel, causal=causal, window=window,
-            block_q=block_q, block_kv=block_kv, scale=scale),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, G, D), lambda b, i, j: (b, i, 0, 0)),
-            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, G, D), lambda b, i, j: (b, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * K, S, G, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q * G,), jnp.float32),
-            pltpu.VMEM((block_q * G,), jnp.float32),
-            pltpu.VMEM((block_q * G, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qg, kg, vg)
+    if causal and prune and block_q == block_kv:
+        out = _flash_causal_packed(
+            qg, kg, vg, window=window, block=block_q, S=S, G=G, D=D,
+            scale=scale, interpret=interpret)
+    else:
+        grid = (B * K, S // block_q, S // block_kv)
+        out = pl.pallas_call(
+            functools.partial(
+                _flash_kernel, causal=causal, window=window,
+                block_q=block_q, block_kv=block_kv, scale=scale),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, G, D), lambda b, i, j: (b, i, 0, 0)),
+                pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+                pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, G, D),
+                                   lambda b, i, j: (b, i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((B * K, S, G, D), q.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((block_q * G,), jnp.float32),
+                pltpu.VMEM((block_q * G,), jnp.float32),
+                pltpu.VMEM((block_q * G, D), jnp.float32),
+            ],
+            interpret=interpret,
+        )(qg, kg, vg)
     return out.reshape(B, K, S, G, D).transpose(0, 2, 1, 3, 4) \
         .reshape(B, S, H, D)

@@ -67,7 +67,7 @@ class Trainer:
             params = lm.init_params(self.arch, jax.random.PRNGKey(seed),
                                     *_padded(self.plan))
             opt = adamw.init_opt_state(params, self.opt_cfg)
-            if self.plan.comm.compress_pod_grads:
+            if self.plan.comm.compresses_gradients:
                 from repro.dist.collectives import ef_state
                 opt["ef"] = ef_state(params)
             return {"params": params, "opt": opt}

@@ -20,7 +20,10 @@ def run_subprocess(code: str, timeout: int = 300) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # force the host platform: the device-count flag only applies to it,
+    # and autodetection in the child probes for a Cloud TPU (30 slow
+    # metadata retries) on machines with libtpu installed but no TPU
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout, env=env)
