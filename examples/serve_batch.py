@@ -1,5 +1,9 @@
 """Serve a small model with batched requests (continuous batching).
 
+The engine is built from the frozen plan artifact the specialization
+flow produced — the same artifact a deployment would reload from the
+content-addressed plan store next to the model checkpoint.
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 
@@ -8,17 +12,20 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_arch
+from repro.configs import ShapeConfig, get_arch
+from repro.core import specialize
 from repro.models import init_params
-from repro.models.lm import RunCfg
 from repro.serve import ServeEngine
 
 
 def main() -> None:
     arch = get_arch("qwen3-8b").reduced()
-    params = init_params(arch, jax.random.PRNGKey(0))
-    engine = ServeEngine(arch, params, RunCfg(block_q=32),
-                         max_batch=4, max_len=128)
+    plan = specialize(arch, ShapeConfig("serve_demo", "decode", 128, 4),
+                      mesh_axes=("data", "model"), mesh_shape=(1, 1))
+    print(f"plan {plan.content_hash()[:12]} "
+          f"(decode_impl={plan.estimates.get('decode_impl', 'xla')})")
+    params = init_params(arch, jax.random.PRNGKey(0), *plan.padded_sizes())
+    engine = ServeEngine.from_plan(plan, params, arch=arch)
 
     rng = np.random.default_rng(0)
     t0 = time.time()

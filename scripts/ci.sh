@@ -17,6 +17,9 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
+    echo "== smoke: plan-artifact store round-trip (fresh-process reload) =="
+    python scripts/plan_roundtrip_smoke.py
+
     echo "== smoke: benchmarks table1 (+ machine-readable rows) =="
     mkdir -p results
     python -m benchmarks.run --only table1 --json results/BENCH_table1.json

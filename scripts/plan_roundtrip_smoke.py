@@ -1,0 +1,73 @@
+"""Plan-artifact round-trip smoke: specialize -> persist -> fresh-process
+reload -> plan-driven serve engine ticks one token.
+
+Guards the plan schema against silent drift: if a field stops surviving
+the disk round-trip (hash mismatch) or the serve engine can no longer be
+built from a reloaded artifact, this fails in CI.
+
+Run:  PYTHONPATH=src python scripts/plan_roundtrip_smoke.py
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def phase1(plan_dir: str) -> str:
+    """Compile + persist the plan; print its content hash."""
+    from repro.configs import ShapeConfig, get_arch
+    from repro.core import specialize
+    arch = get_arch("qwen3-8b").reduced()
+    shape = ShapeConfig("smoke_dec", "decode", 48, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1), plan_dir=plan_dir)
+    return plan.content_hash()
+
+
+def phase2(plan_dir: str, expect_hash: str) -> None:
+    """Fresh process: reload by hash, build the engine, decode a token."""
+    import numpy as np
+    from repro.configs import get_arch
+    from repro.core import get_store
+    from repro.models import init_params
+    from repro.serve import ServeEngine
+    import jax
+
+    store = get_store(plan_dir)
+    plan = store.load(expect_hash)
+    assert plan is not None, f"plan {expect_hash} not reloadable"
+    assert plan.content_hash() == expect_hash, "hash drift across processes"
+
+    arch = get_arch(plan.arch).reduced()
+    params = init_params(arch, jax.random.PRNGKey(0), *plan.padded_sizes())
+    eng = ServeEngine.from_plan(plan, params, arch=arch)
+    assert eng.max_len == 48 and eng.max_batch == 2, \
+        (eng.max_len, eng.max_batch)    # batching limits came from the plan
+    eng.submit(np.arange(8, dtype=np.int32) % arch.vocab_size,
+               max_new_tokens=1)
+    done = eng.run_until_idle(max_ticks=4)
+    assert done and len(done[0].out_tokens) >= 1, "engine produced no token"
+    print(f"plan round-trip smoke OK: {expect_hash[:12]} "
+          f"-> {len(done)} request(s), token {done[0].out_tokens[0]}")
+
+
+def main() -> None:
+    if len(sys.argv) >= 3 and sys.argv[1] == "--phase2":
+        phase2(os.environ["REPRO_PLAN_DIR"], sys.argv[2])
+        return
+    plan_dir = tempfile.mkdtemp(prefix="repro_plan_smoke_")
+    h = phase1(plan_dir)
+    env = {**os.environ, "REPRO_PLAN_DIR": plan_dir,
+           "PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src")}
+    subprocess.run([sys.executable, __file__, "--phase2", h],
+                   check=True, env=env, timeout=300)
+
+
+if __name__ == "__main__":
+    main()

@@ -128,6 +128,27 @@ class Checkpointer:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     # ------------------------------------------------------------------
+    def manifest(self, step: int) -> Dict[str, Any]:
+        """The manifest of one complete checkpoint (empty dict if absent)."""
+        f = self.dir / f"step_{step:08d}" / "manifest.json"
+        try:
+            return json.loads(f.read_text())
+        except (OSError, ValueError):
+            return {}
+
+    def plan_hash(self, step: Optional[int] = None) -> str:
+        """The plan content hash stamped on a checkpoint ("" if unstamped).
+
+        The hash identifies the frozen plan artifact the step function
+        was lowered from; a restart resolves it against the plan store
+        (``<ckpt_dir>/plans``) to skip the specialization flow entirely.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return ""
+        return str(self.manifest(step).get("meta", {}).get("plan_hash", ""))
+
+    # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
         f = self.dir / "LATEST"
         if not f.exists():

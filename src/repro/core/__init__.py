@@ -19,7 +19,11 @@ from repro.core.ir import (
 )
 from repro.core.pipeline import (PassPipeline, clear_plan_cache,
                                  plan_cache_stats, specialize)
-from repro.core.plan import BlockPlan, CommPlan, MemoryPlan, Placement
+from repro.core.plan import (PLAN_SCHEMA_VERSION, BlockPlan, CommPlan,
+                             FrozenBlockPlan, FrozenCommPlan, FrozenPlacement,
+                             FrozenPlan, MemoryPlan, Placement,
+                             diff_decision_logs)
+from repro.core.planstore import PlanStore, default_plan_dir, get_store
 from repro.core.template import Component, ComponentKind, MemoryTemplate
 
 __all__ = [
@@ -28,4 +32,7 @@ __all__ = [
     "clear_plan_cache", "plan_cache_stats",
     "BlockPlan", "CommPlan", "MemoryPlan", "Placement", "Component",
     "ComponentKind", "MemoryTemplate",
+    "FrozenPlan", "FrozenPlacement", "FrozenCommPlan", "FrozenBlockPlan",
+    "PLAN_SCHEMA_VERSION", "diff_decision_logs",
+    "PlanStore", "default_plan_dir", "get_store",
 ]

@@ -99,10 +99,7 @@ def build_run_cfg(plan: MemoryPlan, arch: ArchConfig,
 
 
 def _padded(plan: MemoryPlan):
-    return (int(plan.estimates.get("vocab_padded", 0)),
-            int(plan.estimates.get("heads_padded", 0)),
-            int(plan.estimates.get("ssm_heads_padded", 0)),
-            int(plan.estimates.get("kv_heads_padded", 0)))
+    return plan.padded_sizes()
 
 
 def _param_pspecs(plan: MemoryPlan, arch: ArchConfig, sizes) -> Any:

@@ -10,15 +10,16 @@ lives in :mod:`repro.core.passes.lowering` and consumes only the plan.
 
 from __future__ import annotations
 
-import copy
-from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Type
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence, Tuple, Type
 
 from repro.configs.base import ArchConfig, ShapeConfig, get_arch, get_shape
+import repro.core.planstore as planstore
 from repro.core.costmodel import MeshModel
 from repro.core.describe import describe_program
 from repro.core.ir import ProgramIR
 from repro.core.passes import DEFAULT_PASSES, Pass, PassContext
-from repro.core.plan import MemoryPlan
+from repro.core.plan import FrozenPlan, MemoryPlan
 from repro.core.template import MemoryTemplate
 
 
@@ -35,23 +36,74 @@ class PassPipeline:
 
 
 # ---------------------------------------------------------------------
-# plan cache: the flow is deterministic in (arch, shape, mesh, target,
+# plan store: the flow is deterministic in (arch, shape, mesh, target,
 # passes, options), so repeated callers (benchmarks, serve engine,
-# trainer restarts) can skip redundant pipeline runs.  Entries and hits
-# are deep-copied: returned plans are caller-owned and mutation-safe.
+# trainer restarts) skip redundant pipeline runs.  Hits return the
+# *same immutable FrozenPlan object* — zero-copy, O(1) — backed by the
+# content-addressed on-disk store (repro.core.planstore) that survives
+# process restarts.
 # ---------------------------------------------------------------------
 
-_PLAN_CACHE: Dict[Any, MemoryPlan] = {}
-_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
 
-
-def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    _PLAN_CACHE_STATS.update(hits=0, misses=0)
+def clear_plan_cache(disk: bool = False) -> None:
+    """Drop the memory tier of every store this process created
+    (including ``plan_dir=`` overrides), optionally the disk entries of
+    the default store too."""
+    for store in planstore.all_stores():
+        store.clear(disk=False)
+    if disk:
+        planstore.get_store().clear(disk=True)
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    return {**_PLAN_CACHE_STATS, "size": len(_PLAN_CACHE)}
+    """Counters of the *default* store (``$REPRO_PLAN_DIR`` or
+    ``~/.cache/repro/plans``); ``plan_dir=`` stores keep their own —
+    read them via ``planstore.get_store(plan_dir).stats()``."""
+    return planstore.get_store().stats()
+
+
+_FLOW_FINGERPRINT: Optional[str] = None
+
+
+def _flow_fingerprint() -> str:
+    """Hash of the compiler's own source files.
+
+    The disk tier outlives the process, so the request key must change
+    when the *decision logic* changes — not just the serialized layout
+    (which PLAN_SCHEMA_VERSION covers).  Hashing the pass/cost-model
+    sources makes any edit a clean cache miss instead of silently
+    serving plans compiled by older code.
+    """
+    global _FLOW_FINGERPRINT
+    if _FLOW_FINGERPRINT is None:
+        import hashlib
+        import repro.core.passes as passes_pkg
+        import repro.hw as hw_pkg
+        h = hashlib.sha256()
+        # passes/ + core/*.py + hw/*.py: the hardware tables (VMEM/HBM
+        # budgets, bandwidths) feed the same decisions the passes make
+        roots = [Path(passes_pkg.__file__).parent,
+                 Path(__file__).parent,
+                 Path(hw_pkg.__file__).parent]
+        files: list = []
+        for root in roots:
+            files.extend(root.glob("*.py"))
+        for f in sorted(set(files)):
+            h.update(f.name.encode())
+            h.update(f.read_bytes())
+        _FLOW_FINGERPRINT = h.hexdigest()
+    return _FLOW_FINGERPRINT
+
+
+def _request_key(arch_cfg, shape_cfg, mesh_axes, mesh_shape, target,
+                 passes, use_pallas, options) -> str:
+    pass_names = None if passes is None else tuple(
+        f"{p.__module__}.{p.__qualname__}" for p in passes)
+    return planstore.request_key(
+        _flow_fingerprint(),
+        arch_cfg, shape_cfg, tuple(mesh_axes), tuple(mesh_shape), target,
+        pass_names, use_pallas,
+        tuple(sorted((k, repr(v)) for k, v in options.items())))
 
 
 def specialize(
@@ -63,25 +115,28 @@ def specialize(
     passes: Optional[Sequence[Type[Pass]]] = None,
     use_pallas: str = "auto",
     cache: bool = True,
+    plan_dir: Optional[str | Path] = None,
     **options,
-) -> MemoryPlan:
-    """Run the full specialization flow; returns the MemoryPlan.
+) -> FrozenPlan:
+    """Run the full specialization flow; returns the frozen plan artifact.
 
-    Memoized on the full argument tuple (``cache=False`` bypasses both
-    lookup and insertion — e.g. when benchmarking the flow itself).
+    Memoized on the full argument tuple through the two-tier
+    :class:`~repro.core.planstore.PlanStore`: warm in-memory hits return
+    the same immutable object (no deepcopy); cold processes reload the
+    persisted artifact from ``plan_dir`` (default ``$REPRO_PLAN_DIR`` or
+    ``~/.cache/repro/plans``).  ``cache=False`` bypasses both lookup and
+    insertion — e.g. when benchmarking the flow itself.
     """
     arch_cfg = get_arch(arch) if isinstance(arch, str) else arch
     shape_cfg = get_shape(shape) if isinstance(shape, str) else shape
-    key = None
+    store = key = None
     if cache:
-        key = (arch_cfg, shape_cfg, tuple(mesh_axes), tuple(mesh_shape),
-               target, None if passes is None else tuple(passes), use_pallas,
-               tuple(sorted((k, repr(v)) for k, v in options.items())))
-        hit = _PLAN_CACHE.get(key)
+        store = planstore.get_store(plan_dir)
+        key = _request_key(arch_cfg, shape_cfg, mesh_axes, mesh_shape,
+                           target, passes, use_pallas, options)
+        hit = store.get(key)
         if hit is not None:
-            _PLAN_CACHE_STATS["hits"] += 1
-            return copy.deepcopy(hit)
-        _PLAN_CACHE_STATS["misses"] += 1
+            return hit
     ir = describe_program(arch_cfg, shape_cfg)
     mesh = MeshModel(axes=tuple(mesh_axes), shape=tuple(mesh_shape))
     template = MemoryTemplate.default(target)
@@ -91,12 +146,15 @@ def specialize(
         mesh_axes=tuple(mesh_axes),
         mesh_shape=tuple(mesh_shape),
         target=target,
+        shape_kind=shape_cfg.kind,
+        seq_len=shape_cfg.seq_len,
+        global_batch=shape_cfg.global_batch,
         use_pallas=use_pallas,
     )
     ctx = PassContext(arch=arch_cfg, shape=shape_cfg, ir=ir, mesh=mesh,
                       template=template, plan=plan, options=dict(options))
     pipeline = PassPipeline(passes if passes is not None else DEFAULT_PASSES)
-    result = pipeline.run(ctx)
-    if key is not None:
-        _PLAN_CACHE[key] = copy.deepcopy(result)
+    result = pipeline.run(ctx).freeze()
+    if store is not None:
+        store.put(key, result)
     return result

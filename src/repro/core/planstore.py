@@ -1,0 +1,236 @@
+"""PlanStore — two-tier cache of frozen plan artifacts.
+
+Tier 1 is an in-memory dict of :class:`~repro.core.plan.FrozenPlan`
+views keyed by the *request* hash (arch × shape × mesh × target ×
+passes × options).  Hits return the cached object itself — the artifact
+is immutable, so no deepcopy is needed and a warm ``specialize()`` is
+O(1).
+
+Tier 2 is a content-addressed on-disk store::
+
+    <plan_dir>/
+        <content_hash>.json     # {"schema": N, "content_hash": h, "plan": {...}}
+        by_key/<request_hash>   # text file holding the content hash
+
+``plan_dir`` defaults to ``$REPRO_PLAN_DIR`` or ``~/.cache/repro/plans``
+and can be overridden per call (e.g. a directory next to checkpoints so
+the plan ships with the model).  Entries are written atomically
+(tmp + ``os.replace``); reads tolerate truncated/corrupt/stale files by
+treating them as misses (the flow simply recompiles).  The payload's
+hash is re-verified on load, so a plan reloaded in a second process is
+guaranteed bit-identical to what the first process compiled.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+from repro.core.plan import (FrozenPlan, MemoryPlan, PLAN_SCHEMA_VERSION,
+                             canonical_json)
+
+
+def default_plan_dir() -> Path:
+    env = os.environ.get("REPRO_PLAN_DIR", "")
+    if env:
+        return Path(env).expanduser()
+    return Path.home() / ".cache" / "repro" / "plans"
+
+
+class PlanStore:
+    def __init__(self, plan_dir: Optional[str | Path] = None,
+                 persist: bool = True):
+        self.plan_dir = Path(plan_dir) if plan_dir else default_plan_dir()
+        self.persist = persist
+        self._mem: Dict[str, FrozenPlan] = {}
+        self._stats = {"hits": 0, "disk_hits": 0, "misses": 0,
+                       "corrupt": 0, "evictions": 0, "puts": 0}
+
+    # -- tier-1 + tier-2 lookup ---------------------------------------
+    def get(self, key_hash: str) -> Optional[FrozenPlan]:
+        """Frozen view for a request key, or None (caller compiles)."""
+        plan = self._mem.get(key_hash)
+        if plan is not None:
+            self._stats["hits"] += 1
+            return plan
+        plan = self._load_by_key(key_hash)
+        if plan is not None:
+            self._stats["disk_hits"] += 1
+            self._mem[key_hash] = plan
+            return plan
+        self._stats["misses"] += 1
+        return None
+
+    def put(self, key_hash: str, plan: FrozenPlan) -> str:
+        """Insert a freshly-compiled plan; returns its content hash."""
+        if not isinstance(plan, FrozenPlan):
+            plan = plan.freeze()
+        self._mem[key_hash] = plan
+        self._stats["puts"] += 1
+        h = plan.content_hash()
+        if self.persist:
+            try:
+                self._write_entry(plan, h)
+                self._write_text(self.plan_dir / "by_key" / key_hash, h)
+            except OSError:
+                pass                    # cache dir unwritable -> memory-only
+        return h
+
+    # -- content-addressed access (checkpoint warm starts) ------------
+    def save(self, plan: FrozenPlan) -> str:
+        """Persist by content hash only (no request key)."""
+        if not isinstance(plan, FrozenPlan):
+            plan = plan.freeze()
+        h = plan.content_hash()
+        if self.persist:
+            try:
+                self._write_entry(plan, h)
+            except OSError:
+                pass
+        return h
+
+    def load(self, content_hash: str) -> Optional[FrozenPlan]:
+        """Reload a persisted plan by its content hash (verified)."""
+        return self._read_entry(self.plan_dir / f"{content_hash}.json",
+                                expect_hash=content_hash)
+
+    # -- maintenance ---------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        disk = 0
+        if self.plan_dir.is_dir():
+            disk = sum(1 for _ in self.plan_dir.glob("*.json"))
+        return {**self._stats, "size": len(self._mem), "disk_size": disk}
+
+    def clear(self, disk: bool = False) -> None:
+        """Drop the memory tier (and optionally the on-disk entries)."""
+        self._mem.clear()
+        self._stats.update(hits=0, disk_hits=0, misses=0, corrupt=0,
+                           evictions=0, puts=0)
+        if disk and self.plan_dir.is_dir():
+            for f in self.plan_dir.glob("*.json"):
+                f.unlink(missing_ok=True)
+            by_key = self.plan_dir / "by_key"
+            if by_key.is_dir():
+                for f in by_key.iterdir():
+                    f.unlink(missing_ok=True)
+
+    def evict(self, key_hash: str) -> bool:
+        """Remove one request key from both tiers.
+
+        The content file is deleted only when no *other* request key
+        still references it — content-addressed entries can be shared
+        (identical plans reached via different specialize args, or
+        pinned by a checkpoint's ``plan_hash``).
+        """
+        found = self._mem.pop(key_hash, None) is not None
+        ref = self.plan_dir / "by_key" / key_hash
+        if ref.exists():
+            try:
+                h = ref.read_text().strip()
+                ref.unlink(missing_ok=True)
+                by_key = self.plan_dir / "by_key"
+                still_referenced = any(
+                    f.read_text().strip() == h for f in by_key.iterdir())
+                if h and not still_referenced:
+                    (self.plan_dir / f"{h}.json").unlink(missing_ok=True)
+                found = True
+            except OSError:
+                pass
+        if found:
+            self._stats["evictions"] += 1
+        return found
+
+    # -- disk plumbing -------------------------------------------------
+    def _write_entry(self, plan: FrozenPlan, content_hash: str) -> None:
+        # always (re)write: the atomic replace makes this self-healing —
+        # a corrupt entry under this hash is repaired by the recompile
+        # that its own read-failure triggered
+        entry = {"schema": PLAN_SCHEMA_VERSION, "content_hash": content_hash,
+                 "plan": plan.to_dict()}
+        self._write_text(self.plan_dir / f"{content_hash}.json",
+                         json.dumps(entry, indent=1, default=str))
+
+    def _write_text(self, path: Path, text: str) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)       # atomic: readers never see partials
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _load_by_key(self, key_hash: str) -> Optional[FrozenPlan]:
+        ref = self.plan_dir / "by_key" / key_hash
+        try:
+            h = ref.read_text().strip()
+        except OSError:
+            return None
+        if not h:
+            self._stats["corrupt"] += 1
+            return None
+        return self._read_entry(self.plan_dir / f"{h}.json", expect_hash=h)
+
+    def _read_entry(self, path: Path,
+                    expect_hash: Optional[str] = None) -> Optional[FrozenPlan]:
+        """Parse + verify one on-disk entry; any defect -> miss."""
+        try:
+            entry = json.loads(path.read_text())
+            if entry.get("schema") != PLAN_SCHEMA_VERSION:
+                self._stats["corrupt"] += 1
+                return None
+            # hash the parsed payload directly: the stored dict IS the
+            # canonical to_dict() form (freeze/from_dict are lossless),
+            # so this equals FrozenPlan.content_hash() at half the cost
+            h = hashlib.sha256(
+                canonical_json(entry["plan"]).encode()).hexdigest()
+            if entry.get("content_hash") != h or \
+                    (expect_hash is not None and h != expect_hash):
+                self._stats["corrupt"] += 1
+                return None
+            plan = MemoryPlan.from_dict(entry["plan"]).freeze()
+            object.__setattr__(plan, "_content_hash", h)
+            return plan
+        except OSError:
+            return None
+        except Exception:
+            # truncated JSON, missing fields, stale schema details —
+            # tolerate and recompile rather than crash the caller
+            self._stats["corrupt"] += 1
+            return None
+
+
+# ---------------------------------------------------------------------
+# per-directory store registry (the default store follows REPRO_PLAN_DIR,
+# so tests can point specialize() at a tmpdir via the environment)
+# ---------------------------------------------------------------------
+
+_STORES: Dict[Path, PlanStore] = {}
+
+
+def get_store(plan_dir: Optional[str | Path] = None) -> PlanStore:
+    path = Path(plan_dir) if plan_dir else default_plan_dir()
+    store = _STORES.get(path)
+    if store is None:
+        store = _STORES[path] = PlanStore(path)
+    return store
+
+
+def all_stores() -> tuple:
+    """Every store this process has created (default + plan_dir= ones)."""
+    return tuple(_STORES.values())
+
+
+def request_key(*parts: Any) -> str:
+    """Deterministic request hash from reprs of the specialize() args."""
+    blob = canonical_json({"schema": PLAN_SCHEMA_VERSION,
+                           "parts": [repr(p) for p in parts]})
+    return hashlib.sha256(blob.encode()).hexdigest()

@@ -95,9 +95,10 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         cost_analysis={k: float(v) for k, v in ca.items()
                        if k in ("flops", "bytes accessed")},
         roofline=rep.to_json(),
-        plan_log=plan.log,
-        plan_estimates=plan.estimates,
-        plan_opt=plan.opt,
+        plan_log=[list(e) for e in plan.log],
+        plan_estimates=dict(plan.estimates),
+        plan_opt=dict(plan.opt),
+        plan_hash=plan.content_hash(),
         hlo_sizes={"n_lines": hlo.count(chr(10))},
     )
     return out

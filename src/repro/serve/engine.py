@@ -7,6 +7,12 @@ freed on completion — residency management, not reallocation.
 Scheduling: waiting requests are prefilled (padded to the bucket length)
 into free slots; every engine tick decodes one token for all active
 slots.  Greedy or temperature sampling.
+
+Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
+frozen plan artifact the specialization flow produced (possibly reloaded
+from the on-disk plan store in a different process) and derives the KV
+cache sizing, decode implementation, and batching limits from it — no
+ad-hoc kwargs needed between the compiler and the server.
 """
 
 from __future__ import annotations
@@ -19,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, get_arch
 from repro.models import lm
 from repro.models.lm import RunCfg
 
@@ -43,6 +49,7 @@ class ServeEngine:
                  max_batch: int = 8, max_len: int = 512,
                  ssm_heads: int = 0, kv_heads: int = 0):
         self.arch, self.params, self.cfg = arch, params, cfg
+        self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
         self.cache = lm.init_cache(arch, max_batch, max_len,
                                    ssm_heads=ssm_heads, kv_heads=kv_heads)
@@ -59,6 +66,42 @@ class ServeEngine:
             lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(arch, p, b, cfg, max_len=max_len))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_plan(cls, plan, params, *, arch: Optional[ArchConfig] = None,
+                  mesh=None, max_batch: Optional[int] = None,
+                  max_len: Optional[int] = None) -> "ServeEngine":
+        """Build an engine from the frozen plan artifact.
+
+        The plan supplies everything the kwargs constructor asks for:
+        the RunCfg (flash-attention tiles, padded head counts, decode
+        implementation, pallas-vs-ref dispatch), the KV-cache sizing
+        (padded kv/ssm heads), and the batching limits (the workload
+        dims carried in the artifact).  ``arch`` overrides the registry
+        lookup for reduced/custom configs whose name shadows a
+        registered one; ``max_batch``/``max_len`` override the plan
+        limits (e.g. a single-host deployment of a decode_32k plan).
+
+        Without a ``mesh`` the engine is single-process, so a plan that
+        chose the seq-sharded ``shard_map_flash`` decode falls back to
+        the XLA decode path (the sharding decision needs a real mesh).
+        """
+        from repro.core.passes.lowering import build_run_cfg
+        arch = arch if arch is not None else get_arch(plan.arch)
+        cfg = build_run_cfg(plan, arch, mesh)
+        if mesh is None and cfg.decode_impl != "xla":
+            cfg = dataclasses.replace(cfg, decode_impl="xla")
+        if max_batch is None:
+            max_batch = (plan.global_batch
+                         if plan.shape_kind == "decode" and plan.global_batch
+                         else 8)
+        if max_len is None:
+            max_len = plan.seq_len or 512
+        eng = cls(arch, params, cfg, max_batch=max_batch, max_len=max_len,
+                  ssm_heads=cfg.ssm_heads_padded, kv_heads=cfg.kv_heads_padded)
+        eng.plan = plan
+        return eng
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,

@@ -1,11 +1,19 @@
 """Training loop: plan-lowered step + pipeline + checkpoints + fault hooks.
 
-Everything configurable arrives via the MemoryPlan (the paper's flow
-output) — the trainer itself is plan-agnostic glue:
+Everything configurable arrives via the frozen plan artifact (the
+paper's flow output) — the trainer itself is plan-agnostic glue:
 
     plan = specialize(arch, shape, mesh...)
     trainer = Trainer(plan, mesh)
     trainer.fit(n_steps)
+
+The plan ships with the model: the trainer persists the artifact into a
+content-addressed store next to the checkpoints (``<ckpt_dir>/plans``)
+and stamps every checkpoint manifest with ``plan_hash``.  A restarted
+job warm-starts from the stored artifact (:meth:`Trainer.warm_start`)
+without re-running the compiler; if it recompiles anyway and the hash
+moved, :meth:`Trainer.resume` logs a diff of the two decision logs so
+the drift is visible, not silent.
 """
 
 from __future__ import annotations
@@ -20,8 +28,9 @@ import numpy as np
 
 from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import get_arch, get_shape
+from repro.core import planstore
 from repro.core.passes.lowering import LoweredStep, lower_train_step, _padded
-from repro.core.plan import MemoryPlan
+from repro.core.plan import FrozenPlan, diff_decision_logs
 from repro.data.pipeline import PrefetchPipeline, SyntheticSource
 from repro.models import lm
 from repro.optim import adamw
@@ -38,7 +47,7 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, plan: MemoryPlan, mesh, cfg: Optional[TrainerConfig] = None,
+    def __init__(self, plan: FrozenPlan, mesh, cfg: Optional[TrainerConfig] = None,
                  opt_cfg: Optional[adamw.OptConfig] = None,
                  arch=None, shape=None):
         self.plan = plan
@@ -55,6 +64,62 @@ class Trainer:
         self.timer = StepTimer()
         self.skipper = DeadlineSkipper()
         self.history: list = []
+        # the plan artifact ships with the checkpoints: persist it
+        # content-addressed so a restart reloads it without recompiling
+        self.plan_store = planstore.get_store(
+            Path(self.cfg.ckpt_dir) / "plans")
+        self.plan_hash = (plan.content_hash()
+                          if hasattr(plan, "content_hash") else "")
+        if self.plan_hash:
+            self.plan_store.save(plan)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def warm_start(cls, ckpt_dir: str | Path, mesh,
+                   cfg: Optional[TrainerConfig] = None,
+                   opt_cfg: Optional[adamw.OptConfig] = None,
+                   arch=None, shape=None) -> "Trainer":
+        """Rebuild a trainer from a checkpoint directory's stored plan.
+
+        Reads the latest manifest's ``plan_hash``, reloads the frozen
+        artifact from ``<ckpt_dir>/plans`` (no compiler run), and falls
+        back to re-specializing when the artifact is missing or corrupt
+        (from the caller's ``arch``/``shape`` if given, else the
+        manifest metadata; note non-default ``specialize(**options)``
+        are not recorded in the manifest and cannot be recovered by the
+        fallback — the resulting hash drift is surfaced by
+        :meth:`resume`).
+        """
+        ckpt = Checkpointer(ckpt_dir)
+        step = ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+        meta = ckpt.manifest(step).get("meta", {})
+        store = planstore.get_store(Path(ckpt_dir) / "plans")
+        plan = store.load(meta.get("plan_hash", "")) \
+            if meta.get("plan_hash") else None
+        if plan is None:
+            from repro.core.pipeline import specialize
+            # prefer the caller's configs: reduced/custom arch and ad-hoc
+            # shapes share registry names (or have none at all), so the
+            # manifest names alone would recompile for the wrong model
+            arch_src = arch if arch is not None else meta.get("arch")
+            shape_src = shape if shape is not None else meta.get("shape")
+            if arch_src is None or shape_src is None:
+                raise FileNotFoundError(
+                    f"warm_start: no plan artifact in {ckpt_dir}/plans and "
+                    f"the step_{step:08d} manifest has no usable metadata; "
+                    f"pass arch=/shape= to recompile")
+            print(f"warm_start: plan artifact missing in {ckpt_dir}/plans; "
+                  f"re-running the specialization flow", flush=True)
+            plan = specialize(arch_src, shape_src,
+                              mesh_axes=tuple(mesh.axis_names),
+                              mesh_shape=tuple(mesh.devices.shape),
+                              target=meta.get("plan_target", "tpu-v5e"),
+                              use_pallas=meta.get("plan_use_pallas", "auto"))
+        cfg = cfg or TrainerConfig()
+        cfg = dataclasses.replace(cfg, ckpt_dir=str(ckpt_dir))
+        return cls(plan, mesh, cfg, opt_cfg=opt_cfg, arch=arch, shape=shape)
 
     # ------------------------------------------------------------------
     def init_state(self, seed: int = 0) -> Dict[str, Any]:
@@ -102,17 +167,37 @@ class Trainer:
                 if self.cfg.ckpt_every and (step + 1) % self.cfg.ckpt_every == 0:
                     self.ckpt.save(step + 1, state,
                                    meta={"arch": self.arch.name,
-                                         "shape": self.shape.name})
+                                         "shape": self.shape.name,
+                                         "plan_hash": self.plan_hash,
+                                         "plan_target": self.plan.target,
+                                         "plan_use_pallas":
+                                             self.plan.use_pallas})
         finally:
             pipe.close()
             self.ckpt.wait()
         return state, metrics
 
     def resume(self):
-        """Restore the latest checkpoint (resharded for this mesh)."""
+        """Restore the latest checkpoint (resharded for this mesh).
+
+        Validates the checkpoint's ``plan_hash`` against this trainer's
+        plan: on mismatch the step was recompiled under different
+        decisions, so the diff of the two decision logs is printed (the
+        restore still proceeds — elastic restarts legitimately change
+        the mesh, and the state is resharded either way).
+        """
         shardings = jax.tree.map(
             lambda s: jax.sharding.NamedSharding(self.mesh, s),
             self.step_def.in_pspecs[0],
             is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
         state, manifest = self.ckpt.restore(shardings=shardings)
+        saved_hash = manifest.get("meta", {}).get("plan_hash", "")
+        if saved_hash and self.plan_hash and saved_hash != self.plan_hash:
+            print(f"resume: plan hash changed "
+                  f"{saved_hash[:12]} -> {self.plan_hash[:12]} "
+                  f"(recompiled under different decisions)", flush=True)
+            old = self.plan_store.load(saved_hash)
+            if old is not None:
+                for line in diff_decision_logs(old.log, self.plan.log):
+                    print(f"  plan diff: {line}", flush=True)
         return state, manifest["step"]

@@ -12,6 +12,13 @@ if str(SRC) not in sys.path:
 # own 512-device flag in its own subprocess)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# isolate the on-disk plan store: tests must never see (or pollute) the
+# developer's ~/.cache/repro/plans; subprocess tests inherit the same
+# per-run directory via the environment
+if "REPRO_PLAN_DIR" not in os.environ:
+    import tempfile
+    os.environ["REPRO_PLAN_DIR"] = tempfile.mkdtemp(prefix="repro_plans_test_")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_threefry_partitionable", True)

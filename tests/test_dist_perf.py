@@ -136,13 +136,15 @@ def test_mesh_sizes_accepts_all_mesh_flavors():
 
 # ---------------- plan cache ----------------
 
-def test_plan_cache_hit_miss_and_isolation():
+def test_plan_cache_hit_miss_and_isolation(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_DIR", str(tmp_path))
     clear_plan_cache()
     p1 = specialize("qwen3-8b", "train_4k")
     p2 = specialize("qwen3-8b", "train_4k")
     stats = plan_cache_stats()
     assert stats["hits"] == 1 and stats["misses"] == 1
-    assert p1 is not p2 and p1.to_json() == p2.to_json()
+    # warm hits are zero-copy: the SAME immutable artifact comes back
+    assert p1 is p2 and p1.to_json() == p2.to_json()
     # different key -> miss
     specialize("qwen3-8b", "decode_32k")
     assert plan_cache_stats()["misses"] == 2
@@ -150,10 +152,19 @@ def test_plan_cache_hit_miss_and_isolation():
     specialize("qwen3-8b", "train_4k", cache=False)
     stats = plan_cache_stats()
     assert stats["hits"] == 1 and stats["size"] == 2
-    # caller mutation must not poison the cached plan
-    p2.estimates["poison"] = 1.0
+    # the frozen artifact cannot be poisoned: mutation raises instead
+    with pytest.raises(TypeError):
+        p2.estimates["poison"] = 1.0
     p3 = specialize("qwen3-8b", "train_4k")
     assert "poison" not in p3.estimates
+    # dropping the memory tier falls back to the on-disk artifact —
+    # bit-identical content, same hash
+    from repro.core import planstore
+    store = planstore.get_store()
+    store.clear()
+    p4 = specialize("qwen3-8b", "train_4k")
+    assert plan_cache_stats()["disk_hits"] == 1
+    assert p4 == p1 and p4.content_hash() == p1.content_hash()
 
 
 # ---------------- compressed-schedule decision ----------------

@@ -69,13 +69,26 @@ def test_specialize_invariants(arch, axes, shape):
 
 
 def test_plan_json_roundtrip():
+    from repro.core import FrozenPlan
     plan = specialize("qwen2-vl-72b", "decode_32k")
-    rt = MemoryPlan.from_json(plan.to_json())
+    rt = FrozenPlan.from_json(plan.to_json())
     assert rt.arch == plan.arch
     assert rt.axis_rules.keys() == plan.axis_rules.keys()
     assert rt.comm.grad_schedule == plan.comm.grad_schedule
     assert set(rt.partitions) == set(plan.partitions)
     assert rt.placements["cache.k"].spec == plan.placements["cache.k"].spec
+    # full-fidelity round trip: pad_to / axis_rules / nested spec tuples
+    # all come back as tuples, so the reloaded plan IS the original
+    assert rt == plan
+    assert rt.content_hash() == plan.content_hash()
+    for k, v in plan.axis_rules.items():
+        assert type(rt.axis_rules[k]) is type(v), (k, v)
+    for name, p in plan.placements.items():
+        assert rt.placements[name].pad_to == p.pad_to
+        assert type(rt.placements[name].pad_to) is type(p.pad_to)
+    # the mutable builder round-trips faithfully too
+    builder = MemoryPlan.from_json(plan.to_json())
+    assert builder.freeze() == plan
 
 
 def test_pass_ablation_prefix():

@@ -1,0 +1,255 @@
+"""Frozen plan artifacts: round-trip fidelity, immutability, the
+content-addressed store (corruption tolerance, cross-process reload),
+plan-driven serving, and checkpoint plan-hash warm starts."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, all_archs, get_arch
+from repro.core import (FrozenPlan, MemoryPlan, PlanStore, diff_decision_logs,
+                        specialize)
+from repro.core import planstore
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SMOKE = ShapeConfig("smoke", "train", 64, 4)
+DEC = ShapeConfig("smoke_dec", "decode", 48, 2)
+
+
+# ---------------- round-trip fidelity ----------------
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_roundtrip_every_arch_train_and_decode(arch):
+    a = get_arch(arch)
+    shapes = ["train_4k", "prefill_32k" if a.is_encoder else "decode_32k"]
+    for s in shapes:
+        plan = specialize(arch, s)
+        rt = FrozenPlan.from_json(plan.to_json())
+        assert rt == plan, (arch, s)
+        assert rt.content_hash() == plan.content_hash(), (arch, s)
+        # and through the mutable builder (thaw -> refreeze is lossless)
+        assert plan.thaw().freeze().content_hash() == plan.content_hash()
+
+
+def test_content_hash_is_insertion_order_independent():
+    plan = specialize("qwen3-8b", "train_4k")
+    d = json.loads(plan.to_json())
+    reordered = {k: d[k] for k in reversed(list(d))}
+    rt = MemoryPlan.from_dict(reordered).freeze()
+    assert rt.content_hash() == plan.content_hash()
+
+
+def test_shape_dims_carried_in_artifact():
+    plan = specialize("qwen3-8b", DEC, mesh_shape=(1, 1))
+    assert (plan.shape_kind, plan.seq_len, plan.global_batch) \
+        == ("decode", 48, 2)
+    rt = FrozenPlan.from_json(plan.to_json())
+    assert rt.seq_len == 48 and rt.global_batch == 2
+
+
+# ---------------- immutability ----------------
+
+def test_frozen_plan_mutation_raises():
+    plan = specialize("qwen3-8b", "train_4k")
+    assert isinstance(plan, FrozenPlan)
+    with pytest.raises(Exception):      # FrozenInstanceError
+        plan.use_pallas = "on"
+    with pytest.raises(TypeError):
+        plan.estimates["x"] = 1.0
+    with pytest.raises(TypeError):
+        plan.axis_rules["batch"] = "model"
+    with pytest.raises(TypeError):
+        plan.placements["new"] = None
+    with pytest.raises(Exception):
+        plan.comm.compress_grads = True
+    with pytest.raises(TypeError):
+        plan.partitions["flash_attention"].blocks["block_q"] = 1
+    with pytest.raises(AttributeError):
+        plan.log.append(("x", "y", "z", "w"))
+    # builder-only APIs are not on the artifact
+    assert not hasattr(plan, "record")
+    assert not hasattr(plan, "placement")
+    # but it is hashable (usable as a dict key / memo key)
+    assert {plan: 1}[plan] == 1
+
+
+def test_builder_still_mutable_and_freezes():
+    b = MemoryPlan(arch="a", shape="s", mesh_axes=("data",), mesh_shape=(2,))
+    b.record("p", "subj", "dec", "why")
+    b.placement("t").spec = ("data", None)
+    f = b.freeze()
+    assert f.log == (("p", "subj", "dec", "why"),)
+    assert f.placements["t"].spec == ("data", None)
+
+
+# ---------------- disk store ----------------
+
+def test_store_corruption_tolerance(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_DIR", str(tmp_path))
+    plan = specialize("qwen3-8b", "train_4k")
+    h = plan.content_hash()
+    entry = tmp_path / f"{h}.json"
+    assert entry.exists()
+    # truncate the artifact mid-file: reload must miss, not crash
+    entry.write_text(entry.read_text()[: entry.stat().st_size // 2])
+    store = planstore.get_store()
+    store.clear()                       # drop the memory tier
+    assert store.load(h) is None
+    p2 = specialize("qwen3-8b", "train_4k")      # recompiles cleanly
+    assert p2.content_hash() == h
+    assert store.stats()["corrupt"] >= 1
+
+
+def test_store_rejects_wrong_schema_and_tampered_payload(tmp_path):
+    store = PlanStore(tmp_path)
+    plan = specialize("qwen3-8b", "decode_32k")
+    h = store.save(plan)
+    # stale schema version -> miss
+    entry = json.loads((tmp_path / f"{h}.json").read_text())
+    entry["schema"] = -1
+    (tmp_path / f"{h}.json").write_text(json.dumps(entry))
+    assert store.load(h) is None
+    # tampered payload (hash no longer matches the content) -> miss
+    entry["schema"] = 1
+    entry["plan"]["use_pallas"] = "tampered"
+    (tmp_path / f"{h}.json").write_text(json.dumps(entry))
+    assert store.load(h) is None
+
+
+def test_store_save_load_evict(tmp_path):
+    store = PlanStore(tmp_path)
+    plan = specialize("mamba2-2.7b", "train_4k")
+    h = store.save(plan)
+    assert store.load(h) == plan
+    key = "somekey"
+    store.put(key, plan)
+    assert store.get(key) is plan       # memory tier: same object
+    assert store.evict(key)
+    fresh = PlanStore(tmp_path)         # fresh process simulation
+    assert fresh.get(key) is None       # both tiers evicted
+    assert fresh.stats()["misses"] == 1
+
+
+def test_second_process_reloads_identical_hash(tmp_path):
+    plan = specialize("qwen3-8b", "train_4k", plan_dir=tmp_path)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.core import specialize, plan_cache_stats\n"
+         "p = specialize('qwen3-8b', 'train_4k')\n"
+         "s = plan_cache_stats()\n"
+         "assert s['disk_hits'] == 1 and s['misses'] == 0, s\n"
+         "print(p.content_hash())"],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": SRC,
+             "REPRO_PLAN_DIR": str(tmp_path)})
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert out.stdout.strip().splitlines()[-1] == plan.content_hash()
+
+
+# ---------------- plan-driven serving ----------------
+
+def test_from_plan_matches_kwargs_engine():
+    from repro.models import init_params
+    from repro.models.lm import RunCfg
+    from repro.serve import ServeEngine
+
+    arch = get_arch("qwen3-8b").reduced()
+    plan = specialize(arch, DEC, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    # reduced config on a 1x1 mesh: no padding, so a hand-written RunCfg
+    # is expressible (assert the assumption so drift is visible)
+    pads = plan.padded_sizes()
+    assert pads == (0, 0, 0, 0) or pads == (arch.vocab_size, arch.n_heads,
+                                            0, arch.n_kv_heads), pads
+    params = init_params(arch, jax.random.PRNGKey(0), *pads)
+
+    eng_plan = ServeEngine.from_plan(plan, params, arch=arch)
+    assert eng_plan.max_len == DEC.seq_len            # limits from the plan
+    assert eng_plan.max_batch == DEC.global_batch
+    assert eng_plan.plan is plan
+    eng_kw = ServeEngine(arch, params,
+                         RunCfg(vocab_padded=pads[0], heads_padded=pads[1],
+                                ssm_heads_padded=pads[2],
+                                kv_heads_padded=pads[3], block_q=16),
+                         max_batch=2, max_len=48)
+
+    prompt = np.arange(9, dtype=np.int32) % arch.vocab_size
+    for eng in (eng_plan, eng_kw):
+        eng.submit(prompt, max_new_tokens=5)
+        eng.run_until_idle(max_ticks=16)
+    toks_plan = eng_plan.finished[0].out_tokens
+    toks_kw = eng_kw.finished[0].out_tokens
+    assert toks_plan == toks_kw, (toks_plan, toks_kw)
+
+
+# ---------------- checkpoint plan-hash flow ----------------
+
+def test_trainer_stamps_hash_and_warm_starts(tmp_path, capsys):
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import OptConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    mesh = make_host_mesh()
+    arch = get_arch("qwen3-8b").reduced()
+    mesh_kw = dict(mesh_axes=tuple(mesh.axis_names),
+                   mesh_shape=tuple(mesh.devices.shape))
+    plan = specialize(arch, SMOKE, **mesh_kw)
+    cfg = TrainerConfig(n_steps=2, ckpt_every=2, ckpt_dir=str(tmp_path),
+                        log_every=100)
+    tr = Trainer(plan, mesh, cfg, opt_cfg=OptConfig(total_steps=2),
+                 arch=arch, shape=SMOKE)
+    tr.fit()
+    step = tr.ckpt.latest_step()
+    assert step == 2
+    # the manifest is stamped with the plan hash...
+    assert tr.ckpt.plan_hash(step) == plan.content_hash()
+    # ...and the artifact itself ships next to the checkpoints
+    reloaded = PlanStore(tmp_path / "plans").load(plan.content_hash())
+    assert reloaded == plan
+
+    # a restarted job warm-starts from the stored artifact
+    tr2 = Trainer.warm_start(tmp_path, mesh, opt_cfg=OptConfig(total_steps=2),
+                             arch=arch, shape=SMOKE)
+    assert tr2.plan_hash == plan.content_hash()
+    state, at = tr2.resume()
+    assert at == 2
+
+    # artifact gone -> the fallback recompiles with the CALLER's reduced
+    # arch and ad-hoc shape (manifest names would hit the full registry
+    # config / an unknown shape)
+    import shutil
+    shutil.rmtree(tmp_path / "plans")
+    planstore._STORES.pop(tmp_path / "plans", None)
+    tr4 = Trainer.warm_start(tmp_path, mesh, opt_cfg=OptConfig(total_steps=2),
+                             arch=arch, shape=SMOKE)
+    assert tr4.plan.arch == plan.arch and tr4.plan.seq_len == SMOKE.seq_len
+
+    # hash mismatch (recompiled under different decisions) -> logged
+    # decision diff, restore still succeeds
+    plan_b = specialize(arch, SMOKE, use_pallas="off", **mesh_kw)
+    assert plan_b.content_hash() != plan.content_hash()
+    tr3 = Trainer(plan_b, mesh, cfg, opt_cfg=OptConfig(total_steps=2),
+                  arch=arch, shape=SMOKE)
+    capsys.readouterr()
+    state, at = tr3.resume()
+    assert at == 2
+    assert "plan hash changed" in capsys.readouterr().out
+
+
+def test_diff_decision_logs():
+    old = [("layout", "vocab", "pad_512", "mxu"),
+           ("comm", "grads", "reduce_scatter", "bw")]
+    new = [("layout", "vocab", "pad_1024", "mxu"),
+           ("part", "fa", "512x512", "vmem")]
+    lines = diff_decision_logs(old, new)
+    assert any(line.startswith("~ layout/vocab") for line in lines)
+    assert any(line.startswith("- comm/grads") for line in lines)
+    assert any(line.startswith("+ part/fa") for line in lines)
+    assert diff_decision_logs(new, new) == []
