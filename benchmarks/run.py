@@ -184,6 +184,8 @@ def table2_kernels() -> None:
          f"cache_MiB={cache_bytes/2**20:.0f};"
          f"tpu_stream_us={cache_bytes/tgt.hbm_bw*1e6:.1f}")
 
+    _decode_step_rows(ks, H, K, D)
+
     plan2 = specialize("mamba2-2.7b", "train_4k")
     bp2 = plan2.partitions["ssd_scan"]
     x = jax.random.normal(ks[0], (1, 512, 8, 64))
@@ -202,6 +204,86 @@ def table2_kernels() -> None:
     emit("kernel/tiled_matmul/ref_cpu", _time(mm, a, b),
          f"blocks={bp3.blocks};"
          f"tpu_roofline_us={2*1024**3/tgt.peak_bf16_flops*1e6:.2f}")
+
+
+def _decode_step_rows(ks, H, K, D) -> None:
+    """Decode-step microbench at *mixed batch fill* (staggered per-slot
+    positions, the continuous-batching steady state): xla append+mask vs
+    the flash-decode combine vs the real shard_map seq-sharded path."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    from repro.dist.flash_decode import flash_decode
+    from repro.models import lm
+
+    B, S = 8, 4096
+    q1 = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+    kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+    vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, S, K, D)).astype(jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, S, K, D)).astype(jnp.bfloat16)
+    # staggered fill: slots range from nearly-empty to nearly-full
+    pos = jnp.asarray(np.linspace(64, S - 1, B).astype(np.int32))
+    fill = f"fill={int(pos.min())}..{int(pos.max())}/{S}"
+
+    from repro.models.attention import attention_decode
+
+    def xla_step(q, kn, vn, kc, vc, pos):
+        kc = lm.append_kv(kc, kn, pos)
+        vc = lm.append_kv(vc, vn, pos)
+        return attention_decode(q, kc, vc, cache_len=pos + 1), kc, vc
+
+    emit("decode_step/xla/mixed_fill",
+         _time(jax.jit(xla_step), q1, kn, vn, kc, vc, pos), fill)
+
+    mesh1 = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    fd = jax.jit(lambda *a: flash_decode(*a, mesh=mesh1))
+    emit("decode_step/flash/mixed_fill",
+         _time(fd, q1, kn, vn, kc, vc, pos, 0),
+         fill + ";single-shard online-softmax combine")
+
+    # the seq-sharded shard_map path needs >1 host device: subprocess
+    # with a forced device count (the parent keeps the single real CPU)
+    code = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np, time
+        from repro.dist.flash_decode import flash_decode
+        B, S, H, K, D = {B}, {S}, {H}, {K}, {D}
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+        kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+        vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+        kc = jax.random.normal(ks[1], (B, S, K, D)).astype(jnp.bfloat16)
+        vc = jax.random.normal(ks[2], (B, S, K, D)).astype(jnp.bfloat16)
+        pos = jnp.asarray(np.linspace(64, S - 1, B).astype(np.int32))
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        fn = jax.jit(lambda *a: flash_decode(*a, mesh=mesh))
+        for _ in range(2):
+            jax.block_until_ready(fn(q, kn, vn, kc, vc, pos, 0))
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, kn, vn, kc, vc, pos, 0))
+            ts.append(time.perf_counter() - t0)
+        print("US=%.1f" % (float(np.median(ts)) * 1e6))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": str(
+            Path(__file__).resolve().parents[1] / "src"),
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=2"})
+    us_line = [l for l in out.stdout.splitlines() if l.startswith("US=")]
+    if out.returncode == 0 and us_line:
+        emit("decode_step/shard_map_flash/mixed_fill",
+             float(us_line[0][3:]),
+             fill + ";seq-sharded over model=2 (owning-shard append + "
+             "3-term combine)")
+    else:
+        emit("decode_step/shard_map_flash/mixed_fill", 0.0,
+             "subprocess failed: " + out.stderr.strip()[-200:])
 
 
 # ---------------------------------------------------------------------

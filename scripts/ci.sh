@@ -20,6 +20,9 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: plan-artifact store round-trip (fresh-process reload) =="
     python scripts/plan_roundtrip_smoke.py
 
+    echo "== smoke: plan-driven serve (from_plan -> staggered -> idle) =="
+    python scripts/serve_smoke.py
+
     echo "== smoke: benchmarks table1 (+ machine-readable rows) =="
     mkdir -p results
     python -m benchmarks.run --only table1 --json results/BENCH_table1.json

@@ -102,14 +102,26 @@ def _padded(plan: MemoryPlan):
     return plan.padded_sizes()
 
 
-def _param_pspecs(plan: MemoryPlan, arch: ArchConfig, sizes) -> Any:
+def param_pspecs(plan: MemoryPlan, arch: ArchConfig, sizes,
+                 shapes: Any = None) -> Any:
+    """Resolve the plan's axis rules over the parameter pytree.
+
+    ``shapes`` defaults to the plan-padded IR shapes; pass the actual
+    runtime pytree (e.g. the arrays a serve engine was handed) to resolve
+    against shapes that differ from the IR — divisibility repair then
+    applies to what will really be placed.
+    """
     axes = lm.param_axes(arch, *_padded(plan))
-    shapes = lm.param_shapes(arch, *_padded(plan))
+    if shapes is None:
+        shapes = lm.param_shapes(arch, *_padded(plan))
     return jax.tree.map(
         lambda ax, sds: resolve_pspec(plan.axis_rules, sds.shape, ax, sizes),
         axes, shapes,
         is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(e, (str, type(None))) for e in x))
+
+
+_param_pspecs = param_pspecs
 
 
 def _input_pspecs(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,

@@ -19,6 +19,17 @@ the plan ships with the model).  Entries are written atomically
 treating them as misses (the flow simply recompiles).  The payload's
 hash is re-verified on load, so a plan reloaded in a second process is
 guaranteed bit-identical to what the first process compiled.
+
+The content-addressed tier is size-capped: entries accumulate across
+schema bumps and flow-fingerprint changes (every one is a fresh content
+hash), so each write triggers a lazy :meth:`PlanStore.gc` once the
+entry count passes ``max_disk_entries`` (``$REPRO_PLAN_MAX_ENTRIES``,
+default 256).  GC drops stale-schema entries first, then the
+least-recently-used current ones (disk hits touch mtime); ``by_key``
+refs go with their entry, dangling refs are dropped, refs to live
+entries are LRU-capped at 4x the entry cap (fingerprint churn mints
+new request hashes for identical content), and
+``stats()["disk_size"]`` reflects the evictions.
 """
 
 from __future__ import annotations
@@ -26,6 +37,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import tempfile
 from pathlib import Path
 from typing import Any, Dict, Optional
@@ -43,12 +55,18 @@ def default_plan_dir() -> Path:
 
 class PlanStore:
     def __init__(self, plan_dir: Optional[str | Path] = None,
-                 persist: bool = True):
+                 persist: bool = True,
+                 max_disk_entries: Optional[int] = None):
         self.plan_dir = Path(plan_dir) if plan_dir else default_plan_dir()
         self.persist = persist
+        if max_disk_entries is None:
+            env = os.environ.get("REPRO_PLAN_MAX_ENTRIES", "")
+            max_disk_entries = int(env) if env else 256
+        self.max_disk_entries = max_disk_entries or None   # 0 -> uncapped
         self._mem: Dict[str, FrozenPlan] = {}
         self._stats = {"hits": 0, "disk_hits": 0, "misses": 0,
-                       "corrupt": 0, "evictions": 0, "puts": 0}
+                       "corrupt": 0, "evictions": 0, "gc_evictions": 0,
+                       "puts": 0}
 
     # -- tier-1 + tier-2 lookup ---------------------------------------
     def get(self, key_hash: str) -> Optional[FrozenPlan]:
@@ -76,6 +94,7 @@ class PlanStore:
             try:
                 self._write_entry(plan, h)
                 self._write_text(self.plan_dir / "by_key" / key_hash, h)
+                self._maybe_gc()
             except OSError:
                 pass                    # cache dir unwritable -> memory-only
         return h
@@ -89,6 +108,7 @@ class PlanStore:
         if self.persist:
             try:
                 self._write_entry(plan, h)
+                self._maybe_gc()
             except OSError:
                 pass
         return h
@@ -100,16 +120,126 @@ class PlanStore:
 
     # -- maintenance ---------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        disk = 0
+        disk = disk_bytes = 0
         if self.plan_dir.is_dir():
-            disk = sum(1 for _ in self.plan_dir.glob("*.json"))
-        return {**self._stats, "size": len(self._mem), "disk_size": disk}
+            for f in self.plan_dir.glob("*.json"):
+                disk += 1
+                try:
+                    disk_bytes += f.stat().st_size
+                except OSError:
+                    pass
+        return {**self._stats, "size": len(self._mem), "disk_size": disk,
+                "disk_bytes": disk_bytes}
+
+    def gc(self, max_entries: Optional[int] = None) -> int:
+        """Shrink the content-addressed tier; returns entries removed.
+
+        Stale-schema entries (accumulated across schema bumps) go first;
+        then the oldest-mtime current entries beyond ``max_entries``
+        (defaults to the store's cap).  An evicted entry takes its
+        ``by_key`` refs with it, so the next request is a clean miss
+        that recompiles and re-persists.
+        """
+        if not self.plan_dir.is_dir():
+            return 0
+        cap = self.max_disk_entries if max_entries is None else max_entries
+        removed, live = 0, []
+        dropped: set = set()
+        for f in self.plan_dir.glob("*.json"):
+            if self._entry_schema(f) != PLAN_SCHEMA_VERSION:
+                removed += self._unlink(f)
+                dropped.add(f.stem)
+            else:
+                live.append(f)
+
+        def mtime(f):
+            try:
+                return f.stat().st_mtime
+            except OSError:
+                return 0.0
+
+        if cap and len(live) > cap:
+            live.sort(key=lambda f: (mtime(f), f.name))
+            for f in live[:len(live) - cap]:
+                removed += self._unlink(f)
+                dropped.add(f.stem)
+        # by_key hygiene, one pass: refs of just-dropped or missing
+        # entries go, then the survivors are LRU-trimmed to 4x the entry
+        # cap (reads touch mtime) — refs are tiny but unbounded, since
+        # every flow-fingerprint change mints a fresh request hash that
+        # can point at a still-live content entry.
+        by_key = self.plan_dir / "by_key"
+        if by_key.is_dir():
+            refs = []
+            for ref in by_key.iterdir():
+                try:
+                    h = ref.read_text().strip()
+                except OSError:
+                    continue
+                if (not h or h in dropped
+                        or not (self.plan_dir / f"{h}.json").exists()):
+                    self._unlink(ref)
+                else:
+                    refs.append(ref)
+            if cap and len(refs) > 4 * cap:
+                refs.sort(key=lambda f: (mtime(f), f.name))
+                for ref in refs[:len(refs) - 4 * cap]:
+                    self._unlink(ref)
+        self._stats["gc_evictions"] += removed
+        return removed
+
+    @staticmethod
+    def _entry_schema(f: Path) -> Optional[int]:
+        """The entry's schema stamp, from the file's head only.
+
+        Entries are written with ``schema`` as the first field, so a
+        64-byte read answers the (hot: every over-cap put) GC question
+        without parsing multi-KB plan payloads; foreign layouts fall
+        back to a full parse.
+        """
+        try:
+            with f.open() as fh:
+                head = fh.read(64)
+        except OSError:
+            return None
+        m = re.search(r'"schema":\s*(-?\d+)', head)
+        if m:
+            return int(m.group(1))
+        try:
+            entry = json.loads(f.read_text())
+        except (OSError, ValueError):
+            return None
+        # non-dict payloads (stray arrays/strings) are corrupt -> stale
+        return entry.get("schema") if isinstance(entry, dict) else None
+
+    def _maybe_gc(self) -> None:
+        if not self.max_disk_entries or not self.plan_dir.is_dir():
+            return
+        n = sum(1 for _ in self.plan_dir.glob("*.json"))
+        if n > self.max_disk_entries:
+            self.gc()
+            return
+        # ref churn without entry churn (fingerprint changes remapping to
+        # identical content) must also trigger the trim
+        by_key = self.plan_dir / "by_key"
+        if by_key.is_dir():
+            nrefs = sum(1 for _ in by_key.iterdir())
+            if nrefs > 4 * self.max_disk_entries:
+                self.gc()
+
+    @staticmethod
+    def _unlink(path: Path) -> int:
+        try:
+            path.unlink(missing_ok=True)
+            return 1
+        except OSError:
+            return 0
 
     def clear(self, disk: bool = False) -> None:
         """Drop the memory tier (and optionally the on-disk entries)."""
         self._mem.clear()
         self._stats.update(hits=0, disk_hits=0, misses=0, corrupt=0,
-                           evictions=0, puts=0)
+                           evictions=0, gc_evictions=0, puts=0)
         if disk and self.plan_dir.is_dir():
             for f in self.plan_dir.glob("*.json"):
                 f.unlink(missing_ok=True)
@@ -177,7 +307,13 @@ class PlanStore:
         if not h:
             self._stats["corrupt"] += 1
             return None
-        return self._read_entry(self.plan_dir / f"{h}.json", expect_hash=h)
+        plan = self._read_entry(self.plan_dir / f"{h}.json", expect_hash=h)
+        if plan is not None:
+            try:
+                os.utime(ref)           # LRU touch for the by_key trim
+            except OSError:
+                pass
+        return plan
 
     def _read_entry(self, path: Path,
                     expect_hash: Optional[str] = None) -> Optional[FrozenPlan]:
@@ -198,6 +334,10 @@ class PlanStore:
                 return None
             plan = MemoryPlan.from_dict(entry["plan"]).freeze()
             object.__setattr__(plan, "_content_hash", h)
+            try:
+                os.utime(path)          # LRU touch: gc evicts oldest-mtime
+            except OSError:
+                pass
             return plan
         except OSError:
             return None

@@ -14,7 +14,10 @@ seq-sharded cache:
    per-query tensors instead of gathering the cache).
 
 Semantics match :func:`repro.kernels.ref.decode_attention_ref` with
-``cache_len = pos + 1``; ``pos`` and ``window`` may be traced scalars.
+``cache_len = pos + 1``; ``pos`` is a *per-slot* ``(B,)`` vector (a
+scalar is broadcast) so a continuous batch of mixed prompt lengths
+appends and masks each slot at its own offset; ``window`` may be a
+traced scalar.
 """
 
 from __future__ import annotations
@@ -31,12 +34,24 @@ from repro.dist.sharding import mesh_sizes
 NEG_INF = -1e30
 
 
+def uses_seq_sharding(mesh, seq_len: int, model_axis: str = "model") -> bool:
+    """Whether :func:`flash_decode` will actually run the seq-sharded
+    shard_map path (vs its in-process single-shard combine).  The single
+    source of truth for that dispatch — consumers reporting the decode
+    path (``ServeEngine.decode_path``) must agree with it."""
+    msize = mesh_sizes(mesh).get(model_axis, 1)
+    return msize > 1 and seq_len % msize == 0
+
+
 def _append(cache: jax.Array, new: jax.Array, idx: jax.Array,
-            in_range) -> jax.Array:
-    """Write ``new`` at seq offset ``idx`` iff ``in_range`` (else no-op)."""
-    upd = jax.lax.dynamic_update_slice_in_dim(
-        cache, new.astype(cache.dtype), idx, axis=1)
-    return jnp.where(in_range, upd, cache)
+            in_range: jax.Array) -> jax.Array:
+    """Per-slot write of ``new[b]`` at seq offset ``idx[b]`` iff
+    ``in_range[b]`` (else that slot is a no-op)."""
+    def one(c, n, i, ok):
+        upd = jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), i, axis=0)
+        return jnp.where(ok, upd, c)
+    return jax.vmap(one)(cache, new, idx, in_range)
 
 
 def _partial_attend(q: jax.Array, kc: jax.Array, vc: jax.Array,
@@ -44,8 +59,9 @@ def _partial_attend(q: jax.Array, kc: jax.Array, vc: jax.Array,
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Online-softmax partial terms (m, l, acc) over one seq slice.
 
-    ``kpos`` holds the slice's *global* positions, so the causal/window
-    mask is exact on every shard; fully-masked shards contribute weight
+    ``kpos`` holds the slice's *global* positions and ``pos`` the
+    per-slot ``(B,)`` decode offsets, so the causal/window mask is exact
+    per slot on every shard; fully-masked shards contribute weight
     ``exp(NEG_INF - m_global) == 0`` in the combine.
     """
     B, _, H, D = q.shape
@@ -53,9 +69,10 @@ def _partial_attend(q: jax.Array, kc: jax.Array, vc: jax.Array,
     G = H // K
     qh = q[:, 0].reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
     s = jnp.einsum("bkgd,bskd->bkgs", qh, kc.astype(jnp.float32))
-    valid = kpos <= pos
-    valid &= jnp.where(window > 0, (pos - kpos) < window, True)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = kpos[None, :] <= pos[:, None]                       # (B, Sl)
+    valid &= jnp.where(window > 0,
+                       (pos[:, None] - kpos[None, :]) < window, True)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)
@@ -74,7 +91,7 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
                  v_new: jax.Array,        # (B, 1, K, D)
                  k_cache: jax.Array,      # (B, S, K, D)
                  v_cache: jax.Array,      # (B, S, K, D)
-                 pos,                     # scalar int: append offset
+                 pos,                     # (B,) int per-slot offsets (scalar broadcast)
                  window=0,                # scalar int: 0 = full attention
                  *,
                  mesh: jax.sharding.Mesh,
@@ -90,12 +107,14 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
     pos = jnp.asarray(pos, jnp.int32)
     window = jnp.asarray(window, jnp.int32)
     sizes = mesh_sizes(mesh)
-    msize = sizes.get(model_axis, 1)
     B, S = k_cache.shape[0], k_cache.shape[1]
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
 
-    if msize <= 1 or S % msize != 0:
-        kc = _append(k_cache, k_new, pos, True)
-        vc = _append(v_cache, v_new, pos, True)
+    if not uses_seq_sharding(mesh, S, model_axis):
+        always = jnp.ones((B,), bool)
+        kc = _append(k_cache, k_new, pos, always)
+        vc = _append(v_cache, v_new, pos, always)
         m, l, acc = _partial_attend(q, kc, vc, jnp.arange(S), pos, window)
         return _finish(q, l, acc), kc, vc
 
@@ -109,8 +128,8 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
     def local_fn(q, kn, vn, kc, vc, pos, window):
         Sl = kc.shape[1]
         start = jax.lax.axis_index(model_axis).astype(jnp.int32) * Sl
-        lp = pos - start
-        in_range = (lp >= 0) & (lp < Sl)
+        lp = pos - start                  # (B,) per-slot local offsets
+        in_range = (lp >= 0) & (lp < Sl)  # only the owning shard writes
         kc = _append(kc, kn, jnp.clip(lp, 0, Sl - 1), in_range)
         vc = _append(vc, vn, jnp.clip(lp, 0, Sl - 1), in_range)
         kpos = start + jnp.arange(Sl)
@@ -127,6 +146,6 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
     # model axis (psum/pmax), no need for the static replication checker
     # (repro.compat translates the kwarg for jax < 0.5)
     fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(rep, rep, rep, shd, shd, P(), P()),
+                       in_specs=(rep, rep, rep, shd, shd, P(bspec), P()),
                        out_specs=(rep, shd, shd), check_vma=False)
     return fn(q, k_new, v_new, k_cache, v_cache, pos, window)

@@ -28,7 +28,19 @@ def mesh_sizes(mesh: Any) -> Dict[str, int]:
     if isinstance(shape, Mapping):          # jax.sharding.Mesh
         return dict(shape)
     axes = getattr(mesh, "axes", None) or getattr(mesh, "axis_names", None)
-    return dict(zip(tuple(axes), tuple(shape)))
+    if axes is None or shape is None:
+        raise TypeError(
+            f"mesh_sizes: unsupported mesh-like object "
+            f"{type(mesh).__name__!r}: expected a Mapping "
+            "{axis: size}, a jax.sharding.Mesh (`.shape` mapping), or a "
+            "MeshModel-like object with `.axes`/`.axis_names` and a "
+            f"`.shape` tuple (got axes={axes!r}, shape={shape!r})")
+    axes, shape = tuple(axes), tuple(shape)
+    if len(axes) != len(shape):
+        raise TypeError(
+            f"mesh_sizes: {type(mesh).__name__!r} has {len(axes)} axis "
+            f"names {axes} but a {len(shape)}-entry shape {shape}")
+    return dict(zip(axes, shape))
 
 
 def _names(assign: Any) -> Tuple[str, ...]:
@@ -79,7 +91,7 @@ def tree_shardings(mesh: jax.sharding.Mesh, pspecs: Any) -> Any:
 
 #: runtime cache pytree -> logical axes (matches core.describe's decls)
 CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
-    "pos": (),
+    "pos": ("batch",),                  # per-slot (B,) decode offsets
     "k": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
     "v": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
     "ssm": ("layers", "batch", "ssm_heads", None, None),

@@ -66,6 +66,25 @@ def decode_attention_ref(
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def decode_append_ref(
+    cache: jax.Array,          # (B, S, K, D) session cache
+    new: jax.Array,            # (B, 1, K, D) this step's K or V row
+    pos: jax.Array,            # (B,) or scalar per-slot append offsets
+) -> jax.Array:
+    """Per-slot KV-append oracle: ``cache[b, pos[b]] = new[b, 0]``.
+
+    Ground truth for the vmapped ``dynamic_update_slice`` appends in
+    ``models.lm.append_kv`` and ``dist.flash_decode`` — a continuous
+    batch writes each slot at its *own* offset (mixed prompt lengths).
+    """
+    B, S = cache.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    hot = jax.nn.one_hot(pos, S, dtype=jnp.float32)[..., None, None]
+    out = (cache.astype(jnp.float32) * (1.0 - hot)
+           + new.astype(jnp.float32) * hot)
+    return out.astype(cache.dtype)
+
+
 def ssd_scan_ref(
     x: jax.Array,              # (B, S, H, P) fp32
     dt: jax.Array,             # (B, S, H) fp32 (post-softplus)

@@ -1,11 +1,25 @@
-"""Serving launcher: batched requests through the ServeEngine."""
+"""Serving launcher: batched requests through the ServeEngine.
+
+Two modes:
+
+* kwargs mode (default) — single-process engine from a hand RunCfg,
+  the quick local smoke path.
+* plan mode (``--from-plan``) — run the specialization flow for a
+  decode shape, build the engine with
+  :meth:`ServeEngine.from_plan(mesh=...)`, and serve through whatever
+  decode implementation the plan chose (``shard_map_flash`` drives the
+  seq-sharded flash-decode end-to-end; no silent XLA fallback when a
+  mesh is given).  ``--mesh DxM`` lays the host's devices out as
+  (data, model); ``--coordinator`` enables multi-host serving via
+  ``jax.distributed.initialize`` (every process runs the same command
+  with its own ``--process-id``).
+"""
 
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
 
@@ -16,7 +30,26 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--from-plan", action="store_true",
+                    help="specialize a decode plan and serve via "
+                         "ServeEngine.from_plan")
+    ap.add_argument("--mesh", default="",
+                    help='"DxM" (data, model) mesh over the visible '
+                         "devices, e.g. 1x2; implies --from-plan")
+    ap.add_argument("--coordinator", default="",
+                    help="host:port for jax.distributed.initialize "
+                         "(multi-host serving)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
     args = ap.parse_args()
+
+    import jax
+
+    if args.coordinator:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes, process_id=args.process_id)
 
     from repro.configs.base import get_arch
     from repro.models import init_params
@@ -24,10 +57,31 @@ def main() -> None:
     from repro.serve.engine import ServeEngine
 
     arch = get_arch(args.arch).reduced()
-    params = init_params(arch, jax.random.PRNGKey(0))
-    cfg = RunCfg(block_q=32, ssd_chunk=16)
-    engine = ServeEngine(arch, params, cfg, max_batch=args.max_batch,
-                         max_len=args.max_len)
+    if args.from_plan or args.mesh:
+        from repro.configs import ShapeConfig
+        from repro.core.pipeline import specialize
+
+        if args.mesh:
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+        else:
+            d, m = len(jax.devices()), 1
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        shape = ShapeConfig("serve", "decode", args.max_len, args.max_batch)
+        plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                          mesh_shape=(d, m))
+        params = init_params(arch, jax.random.PRNGKey(0),
+                             *plan.padded_sizes())
+        engine = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh,
+                                       seed=args.seed)
+        print(f"plan {plan.content_hash()[:12]} decode_impl="
+              f"{plan.estimates.get('decode_impl', 'xla')} -> engine "
+              f"decode_path={engine.decode_path} on mesh {d}x{m}")
+    else:
+        params = init_params(arch, jax.random.PRNGKey(0))
+        cfg = RunCfg(block_q=32, ssd_chunk=16)
+        engine = ServeEngine(arch, params, cfg, max_batch=args.max_batch,
+                             max_len=args.max_len, seed=args.seed)
+
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):

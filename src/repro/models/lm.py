@@ -498,10 +498,16 @@ def train_loss(arch: ArchConfig, params, batch, cfg: RunCfg):
 def init_cache(arch: ArchConfig, batch_size: int, max_len: int,
                dtype=jnp.bfloat16, ssm_heads: int = 0,
                kv_heads: int = 0) -> Dict[str, Any]:
-    """Session state ("cache.kv" + SSM states in the template)."""
+    """Session state ("cache.kv" + SSM states in the template).
+
+    ``pos`` is a per-slot ``(B,)`` vector: continuous batching mixes
+    prompt lengths, so each batch entry appends and masks at its own
+    offset (an engine-global scalar silently corrupts every slot whose
+    length differs from the max).
+    """
     L = arch.n_layers
     Hs = ssm_heads or arch.ssm_heads
-    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch_size,), jnp.int32)}
     if arch.has_attention:
         K, hd = kv_heads or arch.n_kv_heads, arch.hd
         cache["k"] = jnp.zeros((L, batch_size, max_len, K, hd), dtype)
@@ -523,13 +529,28 @@ def _flatten_groups(arch, params):
     return params["blocks"], g
 
 
+def append_kv(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-slot KV append: write ``new[b]`` at seq offset ``pos[b]``.
+
+    ``cache`` is ``(B, S, K, hd)``, ``new`` ``(B, 1, K, hd)``, ``pos``
+    ``(B,)`` — each batch entry lands at its own offset (continuous
+    batching; oracle: :func:`repro.kernels.ref.decode_append_ref`).
+    """
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), p, axis=0)
+    return jax.vmap(one)(cache, new, pos)
+
+
 def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
     """One-token decode across all layers. Returns (logits, new_cache)."""
     x, positions, _ = _embed_in(arch, params, batch, cfg)   # (B,1,d)
-    pos = cache["pos"]
     B = x.shape[0]
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    if pos.ndim == 0:                   # legacy scalar: uniform offsets
+        pos = jnp.full((B,), pos, jnp.int32)
     if "positions" not in batch:
-        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        positions = pos[:, None]                            # (B, 1)
         if arch.mrope_sections is not None:
             positions = jnp.broadcast_to(positions, (3, B, 1))
     windows = _window_schedule(arch) if arch.has_attention else \
@@ -568,8 +589,8 @@ def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
                     q = _hint(q, cfg, None, None, "rep", cfg.model_axis)
                     k = _hint(k, cfg, None, None, "rep", cfg.model_axis)
                     v = _hint(v, cfg, None, None, "rep", cfg.model_axis)
-                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
-                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+                kc = append_kv(kc, k, pos)
+                vc = append_kv(vc, v, pos)
                 ctx = attn_mod.attention_decode(q, kc, vc, cache_len=pos + 1,
                                                 window=w)
             out = out + ctx.reshape(B, 1, -1) @ ap.wo
@@ -735,7 +756,7 @@ def prefill(arch: ArchConfig, params, batch, cfg: RunCfg, max_len: int = 0):
     if arch.has_ssm:
         cache["ssm"] = ys[idx].reshape(L, *ys[idx].shape[-4:])
         cache["conv"] = ys[idx + 1].reshape(L, *ys[idx + 1].shape[-3:])
-    cache["pos"] = jnp.asarray(S, jnp.int32)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
     return logits[:, 0], cache
 
 

@@ -6,13 +6,24 @@ freed on completion — residency management, not reallocation.
 
 Scheduling: waiting requests are prefilled (padded to the bucket length)
 into free slots; every engine tick decodes one token for all active
-slots.  Greedy or temperature sampling.
+slots.  Positions are **per slot** (``cache["pos"]`` is ``(B,)``): a
+continuous batch mixes prompt lengths, so each slot appends KV and masks
+attention at its own offset — an engine-global scalar position silently
+corrupts every slot whose length differs from the batch max.  Freed
+slots are masked to ``(token 0, pos 0)`` so their stale KV never flows
+into a live decode.  Greedy or temperature sampling; sampling threads
+one engine PRNG key (``seed=``), split per tick and per slot, so runs
+are reproducible and slots never share a key within a tick.
 
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
 from the on-disk plan store in a different process) and derives the KV
 cache sizing, decode implementation, and batching limits from it — no
-ad-hoc kwargs needed between the compiler and the server.
+ad-hoc kwargs needed between the compiler and the server.  With a
+``mesh`` the engine state is *placed* per the plan's axis rules
+(``dist.sharding.resolve_pspec``/``cache_pspecs``) and a plan that chose
+the seq-sharded ``shard_map_flash`` decode drives it end-to-end — no
+silent XLA fallback.
 """
 
 from __future__ import annotations
@@ -47,7 +58,7 @@ class Request:
 class ServeEngine:
     def __init__(self, arch: ArchConfig, params, cfg: RunCfg,
                  max_batch: int = 8, max_len: int = 512,
-                 ssm_heads: int = 0, kv_heads: int = 0):
+                 ssm_heads: int = 0, kv_heads: int = 0, seed: int = 0):
         self.arch, self.params, self.cfg = arch, params, cfg
         self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
@@ -58,9 +69,11 @@ class ServeEngine:
         self.pending: List[Request] = []
         self._rid = 0
         self.finished: List[Request] = []
-        # slot-level position bookkeeping (cache["pos"] is per-engine tick;
-        # per-slot valid lengths live here)
+        # per-slot valid lengths; mirrored into cache["pos"] every tick
+        # (freed slots stay at 0 — their stale KV is masked out)
         self.slot_len = np.zeros((max_batch,), np.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self._pos_sharding = None      # set by _place_on_mesh()
 
         self._decode = jax.jit(
             lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
@@ -68,10 +81,32 @@ class ServeEngine:
             lambda p, b: lm.prefill(arch, p, b, cfg, max_len=max_len))
 
     # ------------------------------------------------------------------
+    @property
+    def decode_path(self) -> str:
+        """The decode implementation ticks actually run through.
+
+        ``"shard_map_flash"`` only when the seq-sharded path really
+        executes; ``"flash"`` when flash_decode's internal single-shard
+        combine takes over (model axis of size 1, or max_len not
+        divisible by it); ``"xla"`` when no mesh was provided.
+        """
+        impl = self.cfg.decode_impl
+        if impl == "xla":
+            return impl
+        if self.cfg.mesh is None:
+            return "xla"               # lm.decode_step's own guard
+        if impl == "shard_map_flash":
+            from repro.dist.flash_decode import uses_seq_sharding
+            if not uses_seq_sharding(self.cfg.mesh, self.max_len,
+                                     self.cfg.model_axis):
+                return "flash"         # flash_decode's single-shard path
+        return impl
+
     @classmethod
     def from_plan(cls, plan, params, *, arch: Optional[ArchConfig] = None,
                   mesh=None, max_batch: Optional[int] = None,
-                  max_len: Optional[int] = None) -> "ServeEngine":
+                  max_len: Optional[int] = None, seed: int = 0
+                  ) -> "ServeEngine":
         """Build an engine from the frozen plan artifact.
 
         The plan supplies everything the kwargs constructor asks for:
@@ -83,9 +118,12 @@ class ServeEngine:
         registered one; ``max_batch``/``max_len`` override the plan
         limits (e.g. a single-host deployment of a decode_32k plan).
 
-        Without a ``mesh`` the engine is single-process, so a plan that
-        chose the seq-sharded ``shard_map_flash`` decode falls back to
-        the XLA decode path (the sharding decision needs a real mesh).
+        With a ``mesh`` the engine's params and KV cache are placed per
+        the plan's axis rules and a ``shard_map_flash`` decode decision
+        is honored end-to-end.  Without one the engine is
+        single-process, so a plan that chose the seq-sharded decode
+        falls back to the XLA decode path (the sharding decision needs
+        a real mesh).
         """
         from repro.core.passes.lowering import build_run_cfg
         arch = arch if arch is not None else get_arch(plan.arch)
@@ -99,15 +137,48 @@ class ServeEngine:
         if max_len is None:
             max_len = plan.seq_len or 512
         eng = cls(arch, params, cfg, max_batch=max_batch, max_len=max_len,
-                  ssm_heads=cfg.ssm_heads_padded, kv_heads=cfg.kv_heads_padded)
+                  ssm_heads=cfg.ssm_heads_padded, kv_heads=cfg.kv_heads_padded,
+                  seed=seed)
         eng.plan = plan
+        if mesh is not None:
+            eng._place_on_mesh(mesh)
         return eng
+
+    def _place_on_mesh(self, mesh) -> None:
+        """Shard params + session cache per the plan's axis rules."""
+        from jax.sharding import NamedSharding
+        from repro.core.passes.lowering import param_pspecs
+        from repro.dist.sharding import cache_pspecs, mesh_sizes
+
+        sizes = mesh_sizes(mesh)
+        # resolve against the arrays actually handed to us — their shapes
+        # may differ from the IR (reduced configs, caller-side padding)
+        pspecs = param_pspecs(self.plan, self.arch, sizes,
+                              shapes=self.params)
+        self.params = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            self.params, pspecs)
+        cshapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in self.cache.items()}
+        cpspecs = cache_pspecs(self.plan, self.arch, cshapes, sizes)
+        shardings = {k: NamedSharding(mesh, s) for k, s in cpspecs.items()}
+        self.cache = {k: jax.device_put(v, shardings[k])
+                      for k, v in self.cache.items()}
+        self._pos_sharding = shardings["pos"]
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
-        r = Request(self._rid, np.asarray(prompt, np.int32),
-                    max_new_tokens, temperature, t_submit=time.time())
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) + max_new_tokens > self.max_len:
+            # past capacity the per-slot append clamps onto the last cache
+            # row and silently corrupts the tail — refuse loudly instead
+            raise ValueError(
+                f"request needs {len(prompt)} prompt + {max_new_tokens} new "
+                f"tokens > max_len={self.max_len} cache rows; raise max_len "
+                "or lower max_new_tokens")
+        r = Request(self._rid, prompt, max_new_tokens, temperature,
+                    t_submit=time.time())
         self._rid += 1
         self.pending.append(r)
         return r.rid
@@ -122,6 +193,17 @@ class ServeEngine:
             plen = len(r.prompt)
             logits, cache1 = self._prefill(
                 self.params, {"tokens": r.prompt[None, :]})
+            tok = self._sample(logits[0], r.temperature, self._next_key())
+            r.out_tokens.append(int(tok))
+            r.t_first = time.time()
+            if len(r.out_tokens) >= r.max_new_tokens:
+                # the prefill sample already met the budget: finish now —
+                # no decode tick to over-generate on, no cache-slot copy
+                r.done = True
+                r.t_done = r.t_first
+                self.finished.append(r)
+                self.free_slots.append(slot)
+                continue
             # copy the single-sequence cache into the engine cache slot
             for key in ("k", "v", "ssm", "conv"):
                 if key in self.cache:
@@ -135,34 +217,46 @@ class ServeEngine:
                     else:
                         self.cache[key] = self.cache[key].at[:, slot].set(
                             upd[:, 0])
-            tok = self._sample(logits[0], r.temperature)
-            r.out_tokens.append(int(tok))
-            r.t_first = time.time()
             self.slot_len[slot] = plen
             self.active[slot] = r
 
-    def _sample(self, logits: jax.Array, temperature: float) -> int:
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _sample(self, logits: jax.Array, temperature: float,
+                key: jax.Array) -> int:
         logits = logits[:self.arch.vocab_size].astype(jnp.float32)
         if temperature <= 0:
             return int(jnp.argmax(logits))
-        key = jax.random.PRNGKey(int(time.time_ns()) & 0x7FFFFFFF)
         return int(jax.random.categorical(key, logits / temperature))
+
+    def _sync_pos(self) -> None:
+        """Mirror per-slot lengths into the device cache (freed slots 0)."""
+        pos = jnp.asarray(self.slot_len)
+        if self._pos_sharding is not None:
+            pos = jax.device_put(pos, self._pos_sharding)
+        self.cache["pos"] = pos
 
     def step(self) -> int:
         """One engine tick: admit + decode one token for all active slots."""
         self._admit()
         if not self.active:
             return 0
-        # uniform position: engine cache pos = max slot len (slots padded)
-        self.cache["pos"] = jnp.asarray(int(self.slot_len.max()), jnp.int32)
-        last = np.zeros((self.max_batch, 1), np.int32)
+        # per-slot positions: every slot decodes at its own offset.  Freed
+        # slots are masked to (token 0, pos 0): their decode is a bounded
+        # dummy over one cache row, so stale KV / stale last-token garbage
+        # never reaches a live slot's logits.
+        self._sync_pos()
+        tokens = np.zeros((self.max_batch, 1), np.int32)
         for slot, r in self.active.items():
-            last[slot, 0] = r.out_tokens[-1]
+            tokens[slot, 0] = r.out_tokens[-1]
         logits, self.cache = self._decode(self.params, self.cache,
-                                          {"tokens": jnp.asarray(last)})
+                                          {"tokens": jnp.asarray(tokens)})
+        slot_keys = jax.random.split(self._next_key(), self.max_batch)
         finished = []
         for slot, r in list(self.active.items()):
-            tok = self._sample(logits[slot], r.temperature)
+            tok = self._sample(logits[slot], r.temperature, slot_keys[slot])
             r.out_tokens.append(int(tok))
             self.slot_len[slot] += 1
             if len(r.out_tokens) >= r.max_new_tokens:

@@ -59,7 +59,8 @@ def test_lowered_serve_step_executes(name):
     tokens = {"tokens": jnp.ones((DEC.global_batch, 1), jnp.int32)}
     logits, cache = fn(params, cache, tokens)
     assert logits.shape[0] == DEC.global_batch
-    assert int(cache["pos"]) == 1
+    assert cache["pos"].shape == (DEC.global_batch,)   # per-slot positions
+    assert np.all(np.asarray(cache["pos"]) == 1)
     assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
 
 

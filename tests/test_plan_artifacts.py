@@ -137,6 +137,70 @@ def test_store_save_load_evict(tmp_path):
     assert fresh.stats()["misses"] == 1
 
 
+def test_store_gc_size_cap_and_stale_schema(tmp_path):
+    """The content-addressed tier is capped: oldest-mtime entries beyond
+    the cap are evicted (with their by_key refs), stale-schema leftovers
+    go first, and stats()["disk_size"] reflects the shrink."""
+    import time
+
+    store = PlanStore(tmp_path, max_disk_entries=2)
+    # a leftover from a previous schema version must be collected
+    stale = tmp_path / ("0" * 64 + ".json")
+    stale.write_text(json.dumps({"schema": -1, "content_hash": "0" * 64,
+                                 "plan": {}}))
+    plans = [specialize("qwen3-8b", ShapeConfig(f"gc{i}", "train", 64, 4),
+                        cache=False) for i in range(4)]
+    for i, p in enumerate(plans):
+        store.put(f"key{i}", p)
+        time.sleep(0.01)             # distinct mtimes for LRU ordering
+    st = store.stats()
+    assert not stale.exists(), "stale-schema entry survived gc"
+    assert st["disk_size"] <= 2, st
+    assert st["gc_evictions"] >= 3, st          # stale + >=2 over-cap
+    assert st["disk_bytes"] > 0
+    # the newest entry survived; its by_key ref still resolves on disk
+    fresh = PlanStore(tmp_path, max_disk_entries=2)
+    assert fresh.get("key3") == plans[-1]
+    # evicted entries took their by_key refs with them -> clean miss
+    assert fresh.get("key0") is None
+    # explicit gc below the cap is a no-op
+    assert store.gc() == 0
+
+
+def test_store_gc_collects_by_key_refs(tmp_path):
+    """Refs to live entries (minted by flow-fingerprint changes) are
+    LRU-capped at 4x the entry cap, and dangling refs are dropped."""
+    store = PlanStore(tmp_path, max_disk_entries=1)
+    plan = specialize("qwen3-8b", ShapeConfig("refs", "train", 64, 4),
+                      cache=False)
+    for i in range(7):                  # 7 request keys, 1 content entry
+        store.put(f"fingerprint{i}", plan)
+    # ref churn alone (no entry churn) already triggered the trim
+    refs = list((tmp_path / "by_key").iterdir())
+    assert len(refs) <= 5, refs         # 4x cap (+1 just-written)
+    dangling = tmp_path / "by_key" / "deadkey"
+    dangling.write_text("f" * 64)
+    # a stray non-dict payload must be treated as stale, not crash gc
+    junk = tmp_path / ("e" * 64 + ".json")
+    junk.write_text("[1, 2, 3]")
+    store.gc()
+    refs = list((tmp_path / "by_key").iterdir())
+    assert not dangling.exists(), "dangling by_key ref survived gc"
+    assert not junk.exists(), "non-dict payload survived gc"
+    assert len(refs) <= 4, refs         # LRU-trimmed to 4x cap
+    assert store.stats()["disk_size"] == 1
+
+
+def test_store_gc_uncapped_when_disabled(tmp_path):
+    store = PlanStore(tmp_path, max_disk_entries=0)
+    for i in range(4):
+        store.put(f"key{i}", specialize(
+            "qwen3-8b", ShapeConfig(f"nogc{i}", "train", 64, 4),
+            cache=False))
+    assert store.stats()["disk_size"] == 4
+    assert store.stats()["gc_evictions"] == 0
+
+
 def test_second_process_reloads_identical_hash(tmp_path):
     plan = specialize("qwen3-8b", "train_4k", plan_dir=tmp_path)
     out = subprocess.run(

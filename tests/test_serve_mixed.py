@@ -1,0 +1,281 @@
+"""Mixed-length continuous batching: the per-slot position contract.
+
+The serving regression this pins: with an engine-global scalar decode
+position, a continuous batch that mixes prompt lengths appends every
+slot's KV at the *max* slot length and masks attention with the wrong
+``cache_len`` — silently corrupting the specialized KV memory of every
+shorter slot.  ``cache["pos"]`` is now a per-slot ``(B,)`` vector, so a
+staggered batch must be token-identical to sequential single-request
+runs, across architectures (attention/GQA, SSM, hybrid) and both decode
+implementations (XLA and the flash-decode combine).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.kernels import ref
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.lm import RunCfg
+from repro.serve.engine import ServeEngine
+
+CFG = RunCfg(block_q=16, ssd_chunk=16)
+
+
+def _prompts(arch, n=3):
+    return [np.arange(5, dtype=np.int32) % arch.vocab_size,
+            (np.arange(11, dtype=np.int32) * 3) % arch.vocab_size,
+            (np.arange(8, dtype=np.int32) * 7 + 2) % arch.vocab_size][:n]
+
+
+def _serve_sequential(arch, params, cfg, prompts, new_tokens, max_len):
+    out = []
+    for p in prompts:
+        eng = ServeEngine(arch, params, cfg, max_batch=1, max_len=max_len)
+        eng.submit(p, max_new_tokens=new_tokens)
+        done = eng.run_until_idle(max_ticks=4 * new_tokens)
+        assert len(done) == 1
+        out.append(done[0].out_tokens)
+    return out
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"])
+def test_mixed_length_batch_matches_sequential(name):
+    """Staggered prompts, fewer slots than requests (slots are freed and
+    reused mid-flight) -> token-identical to one-request-at-a-time."""
+    arch = get_arch(name).reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch)
+    want = _serve_sequential(arch, params, CFG, prompts, 6, 32)
+
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_idle(max_ticks=64)
+    assert len(done) == len(prompts)
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w, (name, p.shape, got[p.tobytes()], w)
+
+
+def test_mixed_length_batch_matches_sequential_flash_decode():
+    """Same contract through the flash-decode combine (single-shard path
+    on the host mesh; the real seq-sharded shard_map run lives in
+    test_multidevice)."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    cfg = dataclasses.replace(CFG, decode_impl="shard_map_flash", mesh=mesh)
+    prompts = _prompts(arch)
+    want = _serve_sequential(arch, params, cfg, prompts, 5, 32)
+
+    eng = ServeEngine(arch, params, cfg, max_batch=2, max_len=32)
+    # on the single-device host mesh flash_decode runs its single-shard
+    # combine — decode_path reports that honestly (not "shard_map_flash")
+    assert eng.decode_path == "flash"
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    done = eng.run_until_idle(max_ticks=64)
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w, (got[p.tobytes()], w)
+
+
+def test_decode_step_per_slot_positions_vs_oracle():
+    """One lm.decode_step over a hand-staggered cache == per-sequence
+    decode_attention oracle (exact, including RoPE at per-slot offsets)."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(1))
+    prompts = _prompts(arch, 2)
+    max_len = 16
+    cache = lm.init_cache(arch, 2, max_len)
+    toks = []
+    singles = []
+    for slot, p in enumerate(prompts):
+        lg, c1 = lm.prefill(arch, params,
+                            {"tokens": jnp.asarray(p[None], jnp.int32)},
+                            CFG, max_len=max_len)
+        for key in ("k", "v"):
+            cache[key] = cache[key].at[:, slot].set(c1[key][:, 0])
+        toks.append(int(jnp.argmax(lg[0, :arch.vocab_size])))
+        singles.append(c1)
+    cache["pos"] = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    t = jnp.asarray(toks, jnp.int32)[:, None]
+    logits, cache2 = lm.decode_step(arch, params, cache, {"tokens": t}, CFG)
+    assert np.array_equal(np.asarray(cache2["pos"]),
+                          [len(p) + 1 for p in prompts])
+    # each slot's batched logits == its own single-sequence decode
+    for slot, (p, c1) in enumerate(zip(prompts, singles)):
+        lg1, _ = lm.decode_step(arch, params, c1,
+                                {"tokens": t[slot:slot + 1]}, CFG)
+        err = np.abs(np.asarray(logits[slot], np.float32)
+                     - np.asarray(lg1[0], np.float32)).max()
+        assert err < 1e-3, (slot, err)
+
+
+def test_append_kv_matches_ref_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    c = jax.random.normal(ks[0], (4, 16, 2, 8)).astype(jnp.bfloat16)
+    n = jax.random.normal(ks[1], (4, 1, 2, 8)).astype(jnp.bfloat16)
+    pos = jnp.asarray([0, 5, 15, 9], jnp.int32)
+    got = lm.append_kv(c, n, pos)
+    want = ref.decode_append_ref(c, n, pos)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+    # scalar broadcast back-compat
+    got = lm.append_kv(c, n, jnp.full((4,), 3, jnp.int32))
+    want = ref.decode_append_ref(c, n, 3)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+def test_flash_decode_per_slot_matches_oracle_single_shard():
+    from repro.dist.flash_decode import flash_decode
+    mesh = make_host_mesh()
+    B, S, H, K, D = 3, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kn = jax.random.normal(ks[1], (B, 1, K, D))
+    vn = jax.random.normal(ks[2], (B, 1, K, D))
+    kc = jax.random.normal(ks[3], (B, S, K, D))
+    vc = jax.random.normal(ks[4], (B, S, K, D))
+    for pos_list, win in (([0, 13, 31], 0), ([4, 20, 27], 8)):
+        pos = jnp.asarray(pos_list, jnp.int32)
+        ctx, kc2, vc2 = jax.jit(lambda *a: flash_decode(*a, mesh=mesh))(
+            q, kn, vn, kc, vc, pos, win)
+        kr = ref.decode_append_ref(kc, kn, pos)
+        vr = ref.decode_append_ref(vc, vn, pos)
+        r = ref.decode_attention_ref(q[:, 0], kr, vr, cache_len=pos + 1,
+                                     window=win)
+        assert float(jnp.abs(ctx[:, 0] - r).max()) < 1e-5, (pos_list, win)
+        assert np.allclose(np.asarray(kc2), np.asarray(kr))
+
+
+# ---------------- engine PRNG threading ----------------
+
+def test_engine_sampling_seeded_and_reproducible():
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch, 2)
+
+    def run(seed):
+        eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                          seed=seed)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5, temperature=1.0)
+        eng.run_until_idle(max_ticks=32)
+        return [r.out_tokens for r in
+                sorted(eng.finished, key=lambda r: r.rid)]
+
+    assert run(0) == run(0), "same seed must reproduce the run"
+    assert run(0) != run(1), "different seeds must diverge"
+
+
+def test_engine_slots_get_distinct_keys_within_tick():
+    """Two slots sampling the same logits in the same tick must not be
+    forced to the same token (the time_ns()-seeded engine collided)."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    p = _prompts(arch, 1)[0]
+    draws_a, draws_b = [], []
+    for trial in range(4):
+        eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                          seed=trial)
+        eng.submit(p, max_new_tokens=6, temperature=5.0)
+        eng.submit(p, max_new_tokens=6, temperature=5.0)   # identical twin
+        eng.run_until_idle(max_ticks=32)
+        a, b = (r.out_tokens for r in
+                sorted(eng.finished, key=lambda r: r.rid))
+        draws_a += a[1:]
+        draws_b += b[1:]          # [0] is greedy-ish prefill-tick sample
+    assert draws_a != draws_b, "slots shared a PRNG key within ticks"
+
+
+# ---------------- freed-slot masking ----------------
+
+def test_freed_slots_do_not_perturb_live_ones():
+    """A long request keeps decoding while its neighbor finishes and the
+    slot sits idle -> its tokens must equal the run where it was alone."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch, 2)
+
+    alone = ServeEngine(arch, params, CFG, max_batch=2, max_len=32)
+    alone.submit(prompts[0], max_new_tokens=10)
+    done = alone.run_until_idle(max_ticks=32)
+    want = done[0].out_tokens
+
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32)
+    eng.submit(prompts[0], max_new_tokens=10)    # long-lived
+    eng.submit(prompts[1], max_new_tokens=2)     # finishes early, slot idles
+    done = eng.run_until_idle(max_ticks=32)
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    assert got[prompts[0].tobytes()] == want
+    # the freed slot is masked to pos 0 on every later tick
+    assert eng.slot_len[1] == 0 or eng.slot_len[0] == 0
+
+
+def test_submit_rejects_requests_past_cache_capacity():
+    """prompt + max_new_tokens beyond max_len would clamp appends onto
+    the last cache row (silent corruption) -> loud ValueError instead."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params, CFG, max_batch=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(np.arange(12, dtype=np.int32), max_new_tokens=10)
+    # exactly at capacity is fine
+    eng.submit(np.arange(12, dtype=np.int32) % arch.vocab_size,
+               max_new_tokens=4)
+    done = eng.run_until_idle(max_ticks=16)
+    assert len(done) == 1 and len(done[0].out_tokens) == 4
+
+
+def test_request_satisfied_by_prefill_finishes_without_decode():
+    """max_new_tokens=1 is met by the prefill sample: exactly one token,
+    no decode tick, and the slot is returned immediately."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32)
+    eng.submit(_prompts(arch, 1)[0], max_new_tokens=1)
+    done = eng.run_until_idle(max_ticks=8)
+    assert len(done) == 1 and len(done[0].out_tokens) == 1
+    assert not eng.active and sorted(eng.free_slots) == [0, 1]
+
+
+# ---------------- plumbing the per-slot pos through sharding ----------
+
+def test_cache_pspecs_pos_follows_batch_rule():
+    from repro.dist.sharding import cache_pspecs
+    from repro.core.pipeline import specialize
+    plan = specialize("qwen2-vl-72b", "decode_32k")
+    sizes = {"data": 16, "model": 16}
+    shapes = {
+        "pos": jax.ShapeDtypeStruct((128,), jnp.int32),
+        "k": jax.ShapeDtypeStruct((80, 128, 32768, 8, 128), jnp.bfloat16),
+    }
+    specs = cache_pspecs(plan, None, shapes, sizes)
+    # per-slot pos is sharded exactly like the cache's batch dim
+    assert tuple(specs["pos"]) == (tuple(specs["k"])[1],)
+    # a legacy scalar pos still resolves to the empty spec
+    scalar = cache_pspecs(plan, None,
+                          {"pos": jax.ShapeDtypeStruct((), jnp.int32)},
+                          sizes)
+    assert tuple(scalar["pos"]) == ()
+
+
+def test_mesh_sizes_rejects_unknown_mesh_clearly():
+    from repro.dist.sharding import mesh_sizes
+    with pytest.raises(TypeError, match="mesh_sizes: unsupported"):
+        mesh_sizes(object())
+    with pytest.raises(TypeError, match="axis names"):
+        class Bad:
+            axes = ("data", "model")
+            shape = (4,)
+        mesh_sizes(Bad())
+    # the supported flavors still resolve
+    assert mesh_sizes({"data": 2}) == {"data": 2}
