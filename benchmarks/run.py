@@ -185,6 +185,7 @@ def table2_kernels() -> None:
          f"tpu_stream_us={cache_bytes/tgt.hbm_bw*1e6:.1f}")
 
     _decode_step_rows(ks, H, K, D)
+    _paged_occupancy_rows(ks, H, K, D)
 
     plan2 = specialize("mamba2-2.7b", "train_4k")
     bp2 = plan2.partitions["ssd_scan"]
@@ -284,6 +285,67 @@ def _decode_step_rows(ks, H, K, D) -> None:
     else:
         emit("decode_step/shard_map_flash/mixed_fill", 0.0,
              "subprocess failed: " + out.stderr.strip()[-200:])
+
+
+def _paged_occupancy_rows(ks, H, K, D) -> None:
+    """Dense vs paged decode_step at 25/50/100% slot occupancy.
+
+    The dense cache pins ``B x S`` rows no matter how many slots are
+    live; the block pool pins only the blocks live slots own — the
+    memory column is the reclamation story, the latency column the cost
+    of the table gather.  Geometry comes from the same cost model the
+    pass uses (``kv_block_len``)."""
+    from repro.core.costmodel import kv_block_len
+    from repro.models import lm
+    from repro.models.attention import attention_decode, attention_decode_paged
+
+    B, S = 8, 4096
+    bl = kv_block_len(S)
+    nb = S // bl
+    q1 = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+    kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+    vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, S, K, D)).astype(jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, S, K, D)).astype(jnp.bfloat16)
+    pool_k = kc.reshape(B * nb, bl, K, D)
+    pool_v = vc.reshape(B * nb, bl, K, D)
+    row_bytes = 2 * K * D * 2                       # k+v, bf16
+
+    def dense_step(q, kn, vn, kc, vc, pos):
+        kc = lm.append_kv(kc, kn, pos)
+        vc = lm.append_kv(vc, vn, pos)
+        return attention_decode(q, kc, vc, cache_len=pos + 1), kc, vc
+
+    def paged_step(q, kn, vn, kp, vp, tbl, pos):
+        kp = lm.append_kv_paged(kp, kn, pos, tbl)
+        vp = lm.append_kv_paged(vp, vn, pos, tbl)
+        ctx = attention_decode_paged(q, kp, vp, tbl, cache_len=pos + 1)
+        return ctx, kp, vp
+
+    dense_fn = jax.jit(dense_step)
+    paged_fn = jax.jit(paged_step)
+    for occ in (25, 50, 100):
+        n_live = max(1, B * occ // 100)
+        pos_np = np.zeros((B,), np.int32)
+        pos_np[:n_live] = np.linspace(64, S - 1, n_live).astype(np.int32)
+        pos = jnp.asarray(pos_np)
+        tbl_np = np.full((B, nb), -1, np.int32)
+        used = 0
+        for b in range(n_live):
+            need = int(np.ceil((pos_np[b] + 1) / bl))
+            tbl_np[b, :need] = np.arange(used, used + need)
+            used += need
+        tbl = jnp.asarray(tbl_np)
+        dense_mib = B * S * row_bytes / 2**20       # pinned regardless
+        paged_mib = used * bl * row_bytes / 2**20   # live blocks only
+        fill = f"occ={occ}%;live={n_live}/{B}"
+        emit(f"decode_step/dense/occ{occ}",
+             _time(dense_fn, q1, kn, vn, kc, vc, pos),
+             fill + f";pinned_MiB={dense_mib:.0f}")
+        emit(f"decode_step/paged/occ{occ}",
+             _time(paged_fn, q1, kn, vn, pool_k, pool_v, tbl, pos),
+             fill + f";pinned_MiB={paged_mib:.0f};"
+             f"block_len={bl};blocks={used}/{B * nb}")
 
 
 # ---------------------------------------------------------------------

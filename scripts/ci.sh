@@ -23,6 +23,9 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: plan-driven serve (from_plan -> staggered -> idle) =="
     python scripts/serve_smoke.py
 
+    echo "== smoke: paged serve (block pool, bucketed admission, reclaim) =="
+    python scripts/serve_smoke.py --paged
+
     echo "== smoke: benchmarks table1 (+ machine-readable rows) =="
     mkdir -p results
     python -m benchmarks.run --only table1 --json results/BENCH_table1.json

@@ -8,8 +8,17 @@ submit a staggered mix of prompt lengths (more requests than slots, so
 slots are freed and reused mid-flight), and assert every request
 finishes with the requested token count — and that the engine really
 decodes through the plan's implementation (no silent XLA fallback).
+
+Two residency modes:
+
+* default — forces ``kv_residency="dense"`` (the PR3 dense seq-sharded
+  contract this smoke has always pinned);
+* ``--paged`` — lets the pass choose the block pool (it does, for this
+  depth), asserts the engine serves through it with bucketed batched
+  admission, and that every block returns to the pool at idle.
 """
 
+import argparse
 import dataclasses
 import sys
 
@@ -23,38 +32,60 @@ from repro.serve.engine import ServeEngine
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged", action="store_true",
+                    help="exercise the paged block-pool residency path")
+    args = ap.parse_args()
+
     # kv_heads=1 on a (model=2) plan mesh -> seq spill -> shard_map_flash
     arch = dataclasses.replace(get_arch("qwen3-8b").reduced(), n_kv_heads=1)
     shape = ShapeConfig("serve_smoke", "decode", 32, 2)
+    options = {} if args.paged else {"kv_residency": "dense"}
     plan = specialize(arch, shape, mesh_axes=("data", "model"),
-                      mesh_shape=(1, 2))
+                      mesh_shape=(1, 2), **options)
     impl = plan.estimates.get("decode_impl", "xla")
     assert impl == "shard_map_flash", f"plan chose {impl!r}"
+    kvres = plan.estimates.get("kv_residency", "dense")
+    assert kvres == ("paged" if args.paged else "dense"), kvres
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     params = lm.init_params(arch, jax.random.PRNGKey(0),
                             *plan.padded_sizes())
     eng = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh)
+    assert eng.kv_residency == kvres, (eng.kv_residency, kvres)
     # no silent XLA fallback: ticks go through the flash combine — the
-    # real seq-sharded shard_map on a >1-wide model axis, its in-process
-    # single-shard path on one device
+    # real sharded shard_map path on a >1-wide model axis (seq-sharded
+    # dense stripes, or the pool dim when paged), the in-process
+    # single-shard combine on one device
     want = "shard_map_flash" if n_dev > 1 else "flash"
     assert eng.decode_path == want, (eng.decode_path, want)
 
     rng = np.random.default_rng(0)
-    want = []
-    for plen, mnt in ((5, 6), (11, 4), (8, 5), (14, 3)):   # staggered
+    want_counts = []
+    # staggered lengths; the leading same-length pair lands in one
+    # bucketed prefill (both slots are free at t=0)
+    for plen, mnt in ((11, 4), (11, 5), (5, 6), (8, 5), (14, 3)):
         eng.submit(rng.integers(0, arch.vocab_size, (plen,)).astype(np.int32),
                    max_new_tokens=mnt)
-        want.append(mnt)
+        want_counts.append(mnt)
     done = eng.run_until_idle(max_ticks=64)
-    assert len(done) == len(want), (len(done), len(want))
+    assert len(done) == len(want_counts), (len(done), len(want_counts))
     got = sorted(len(r.out_tokens) for r in done)
-    assert got == sorted(want), (got, want)
+    assert got == sorted(want_counts), (got, want_counts)
+    extra = ""
+    if args.paged:
+        stats = eng.block_stats()
+        assert stats["total"] > 0 and stats["free"] == stats["total"], \
+            f"blocks leaked: {stats}"
+        assert max(eng.prefill_batches) > 1, (
+            "bucketed admission never batched a prefill: "
+            f"{eng.prefill_batches}")
+        extra = (f", paged pool {stats['total']}x{eng.block_len} rows "
+                 f"reclaimed, prefill buckets {list(eng.prefill_batches)}")
     print(f"serve smoke OK: {len(done)} requests, "
           f"{sum(got)} tokens via {eng.decode_path} "
-          f"(plan {plan.content_hash()[:12]})")
+          f"(plan {plan.content_hash()[:12]}){extra}")
     return 0
 
 

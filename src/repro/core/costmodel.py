@@ -205,6 +205,98 @@ def estimate_step(
 
 
 # ---------------------------------------------------------------------------
+# KV residency model (data-organization pass, serving shapes)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVBlockGeometry:
+    """Plan-chosen block-pool geometry for the paged KV template.
+
+    The serving KV cache is the template's biggest memory consumer; the
+    data-organization pass sizes it like any other memory: a block pool
+    of ``n_blocks`` blocks of ``block_len`` cache rows each, shared by
+    all layers (one block id indexes every layer's pool), with a per-slot
+    block table mapping sequence positions to blocks.
+    """
+
+    block_len: int                 # cache rows per block
+    blocks_per_seq: int            # ceil(seq_len / block_len)
+    n_blocks: int                  # pool capacity
+    dense_bytes: int               # B x seq_len stripe footprint (k+v, all layers)
+    paged_bytes: int               # pool footprint at this capacity
+
+    @property
+    def table_cols(self) -> int:
+        return self.blocks_per_seq
+
+
+def kv_block_len(seq_len: int, min_block: int = 16,
+                 max_block: int = 512) -> int:
+    """Block length for a ``seq_len``-deep cache: the largest power of
+    two in [min_block, max_block] that still leaves >= 8 blocks per
+    sequence (reclamation granularity), floored at ``min_block``.
+
+    Powers of two keep the in-block offset a cheap mask and the block
+    row count a multiple of the TPU sublane tile.
+    """
+    bl = min_block
+    while bl * 2 <= max_block and bl * 2 * 8 <= seq_len:
+        bl *= 2
+    return bl
+
+
+def kv_block_geometry(
+    seq_len: int,
+    batch: int,
+    n_layers: int,
+    kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    budget_bytes: Optional[float] = None,
+    data_shards: int = 1,
+    align: int = 1,
+) -> KVBlockGeometry:
+    """Choose the paged-pool geometry for a decode workload.
+
+    The pool has no batch dim (blocks are dynamically assigned to
+    slots), so unlike the dense cache it cannot shard over the data
+    axis — it *replicates* there.  ``data_shards`` therefore divides
+    the worst-case capacity: per-device the pool then never exceeds the
+    dense stripes it replaces (paged oversubscribes by the data degree,
+    which is the reclamation bet — churn keeps the pool fed).  A
+    ``budget_bytes`` cap (the HBM left for the cache on one data
+    replica) shrinks it further — never below one full sequence, the
+    minimum the engine needs to make progress.  ``align`` (the model
+    axis size) rounds the capacity to a shardable multiple: a
+    non-divisible pool would silently *replicate* per model shard
+    instead, blowing the very budget this sizing validated.
+    """
+    bl = kv_block_len(seq_len)
+    per_seq = -(-seq_len // bl)
+    want = max(1, batch) * per_seq
+    block_bytes = 2 * n_layers * bl * kv_heads * head_dim * dtype_bytes
+    n = max(per_seq, want // max(1, data_shards))
+    if budget_bytes is not None and block_bytes > 0:
+        cap = int(budget_bytes // block_bytes)
+        n = max(per_seq, min(n, cap))
+    if align > 1:
+        # round down to a shardable multiple; if the one-sequence floor
+        # forces past it, round the floor UP instead (slightly over
+        # budget beats an msize-times replicated pool)
+        n = align * (n // align)
+        if n < per_seq:
+            n = align * (-(-per_seq // align))
+    return KVBlockGeometry(
+        block_len=bl,
+        blocks_per_seq=per_seq,
+        n_blocks=n,
+        dense_bytes=2 * n_layers * max(1, batch) * seq_len
+        * kv_heads * head_dim * dtype_bytes,
+        paged_bytes=n * block_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
 # VMEM tiling model (local partitioning pass)
 # ---------------------------------------------------------------------------
 

@@ -19,7 +19,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Optional, Tuple
 
-from repro.core.costmodel import MeshModel, bytes_per_device, shard_factor
+from repro.core.costmodel import (MeshModel, bytes_per_device,
+                                  kv_block_geometry, shard_factor)
 from repro.core.ir import MemorySpace, Role, TensorDecl
 from repro.core.passes import Pass, PassContext
 
@@ -169,7 +170,77 @@ class DataOrganizationPass(Pass):
         for t in ctx.ir.by_role(Role.KV_CACHE):
             self._shard_cache(ctx, t, budget)
 
+        # KV residency: dense per-slot stripes vs a plan-sized block pool
+        self._choose_kv_residency(ctx, budget, persistent)
+
         plan.estimates["hbm_budget_bytes"] = float(budget)
+
+    # ------------------------------------------------------------------
+    def _choose_kv_residency(self, ctx: PassContext, budget: float,
+                             persistent: float) -> None:
+        """Dense per-slot stripes vs a plan-sized paged block pool.
+
+        The serving KV cache is the one memory whose *occupancy* varies
+        at runtime (slots churn); paging turns freed slots back into pool
+        capacity instead of dead masked rows.  The pass decides the
+        geometry (block_len, n_blocks) from the workload dims and the
+        HBM left after persistent state.  Dense wins when the cache is
+        too shallow for blocks to matter, or when the mesh has a >1 data
+        degree: the pool has no batch dim, so it *replicates* there —
+        every data shard would gather and score the full batch's views,
+        regressing the step's working set and compute (2-D pool sharding
+        is the ROADMAP item that lifts this).  An
+        ``options['kv_residency']`` override forces either.
+        """
+        plan, arch, shape = ctx.plan, ctx.arch, ctx.shape
+        if shape.kind != "decode" or not arch.has_attention:
+            return
+        # the pool shards only over the model axis and REPLICATES over
+        # the data axis (no batch dim): its budget is one data replica's
+        # HBM headroom, and its capacity is divided by the data degree
+        # so per-device paged never exceeds the dense stripes it
+        # replaces.  (zero headroom is a real cap — it clamps the pool
+        # to the one-sequence floor, not to the uncapped worst case.)
+        msize = ctx.mesh.axis_size("model") if "model" in ctx.mesh.axes else 1
+        dsize = max(1, ctx.mesh.n_devices // msize)
+        left = max(budget - persistent, 0.0) * msize
+        geo = kv_block_geometry(
+            shape.seq_len, shape.global_batch, arch.n_layers,
+            arch.n_kv_heads, arch.hd, budget_bytes=left,
+            data_shards=dsize, align=msize)
+        forced = ctx.options.get("kv_residency")
+        paged = (geo.blocks_per_seq >= 2 and dsize == 1) if forced is None \
+            else forced == "paged"
+        plan.estimates["kv_residency"] = "paged" if paged else "dense"
+        if not paged:
+            if forced is not None:
+                why = "forced by options"
+            elif dsize > 1:
+                why = (f"pool would replicate over the {dsize}-wide data "
+                       "degree (no batch dim to shard): per-chip decode "
+                       "working set and compute regress vs dense stripes "
+                       "— needs 2-D pool sharding")
+            else:
+                why = (f"cache depth {shape.seq_len} yields "
+                       f"{geo.blocks_per_seq} block(s)/seq at "
+                       f"block_len={geo.block_len} — paging buys no "
+                       "reclamation granularity")
+            self.record(ctx, "kv_residency", "dense", why)
+            return
+        plan.estimates["kv_block_len"] = geo.block_len
+        plan.estimates["kv_n_blocks"] = geo.n_blocks
+        plan.estimates["kv_dense_bytes"] = float(geo.dense_bytes)
+        plan.estimates["kv_paged_bytes"] = float(geo.paged_bytes)
+        for t in ctx.ir.by_role(Role.KV_CACHE):
+            plan.placement(t.name).layout["kv_residency"] = "paged"
+            plan.placement(t.name).decided_by.append(self.name + ":paged")
+        self.record(
+            ctx, "kv_residency",
+            f"paged block_len={geo.block_len} n_blocks={geo.n_blocks}",
+            f"pool {geo.paged_bytes/msize/2**30:.2f} GiB/chip (model-"
+            f"sharded, data-replicated) vs dense stripes "
+            f"{geo.dense_bytes/(dsize*msize)/2**30:.2f} GiB/chip; freed "
+            "slots return blocks to the pool instead of masking rows")
 
     # ------------------------------------------------------------------
     def _pick_strategy(self, ctx: PassContext) -> str:

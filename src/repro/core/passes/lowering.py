@@ -102,6 +102,22 @@ def _padded(plan: MemoryPlan):
     return plan.padded_sizes()
 
 
+def init_plan_cache(plan: MemoryPlan, arch: ArchConfig, batch: int,
+                    seq_len: int, *, ssm_heads: int = 0, kv_heads: int = 0):
+    """Materialize the session cache the plan's residency decision asks
+    for: a block pool (+ block table) for ``kv_residency == "paged"``,
+    dense per-slot stripes otherwise.  The shape every consumer of
+    ``lower_serve_step`` must feed it."""
+    if str(plan.estimates.get("kv_residency", "dense")) == "paged":
+        return lm.init_paged_cache(
+            arch, batch, seq_len,
+            int(plan.estimates["kv_block_len"]),
+            int(plan.estimates["kv_n_blocks"]),
+            ssm_heads=ssm_heads, kv_heads=kv_heads)
+    return lm.init_cache(arch, batch, seq_len,
+                         ssm_heads=ssm_heads, kv_heads=kv_heads)
+
+
 def param_pspecs(plan: MemoryPlan, arch: ArchConfig, sizes,
                  shapes: Any = None) -> Any:
     """Resolve the plan's axis rules over the parameter pytree.
@@ -267,10 +283,13 @@ def lower_serve_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
                                 ("batch", "vocab"), sizes)
 
     if shape.kind == "decode":
+        # the serve step runs against whatever residency the plan chose
+        # (paged block pool vs dense per-slot stripes)
         cache_shapes = jax.eval_shape(
-            lambda: lm.init_cache(arch, shape.global_batch, shape.seq_len,
-                                  ssm_heads=cfg.ssm_heads_padded,
-                                  kv_heads=cfg.kv_heads_padded))
+            lambda: init_plan_cache(plan, arch, shape.global_batch,
+                                    shape.seq_len,
+                                    ssm_heads=cfg.ssm_heads_padded,
+                                    kv_heads=cfg.kv_heads_padded))
         cpspecs = cache_pspecs(plan, arch, cache_shapes, sizes)
 
         def serve_step(params, cache, batch):

@@ -18,6 +18,11 @@ Semantics match :func:`repro.kernels.ref.decode_attention_ref` with
 scalar is broadcast) so a continuous batch of mixed prompt lengths
 appends and masks each slot at its own offset; ``window`` may be a
 traced scalar.
+
+:func:`flash_decode_paged` is the paged-residency twin: the cache is a
+block pool + per-slot block table, the *pool* dim takes the model axis
+(there is no contiguous seq dim to shard), and the same 3-term combine
+runs over each shard's owned blocks.
 """
 
 from __future__ import annotations
@@ -55,23 +60,29 @@ def _append(cache: jax.Array, new: jax.Array, idx: jax.Array,
 
 
 def _partial_attend(q: jax.Array, kc: jax.Array, vc: jax.Array,
-                    kpos: jax.Array, pos: jax.Array, window: jax.Array
+                    kpos: jax.Array, pos: jax.Array, window: jax.Array,
+                    extra_mask: jax.Array = None,
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Online-softmax partial terms (m, l, acc) over one seq slice.
 
-    ``kpos`` holds the slice's *global* positions and ``pos`` the
-    per-slot ``(B,)`` decode offsets, so the causal/window mask is exact
-    per slot on every shard; fully-masked shards contribute weight
-    ``exp(NEG_INF - m_global) == 0`` in the combine.
+    ``kpos`` holds the slice's *global* positions — ``(Sl,)`` shared, or
+    ``(B, Sl)`` per slot (the paged path's compacted views differ per
+    slot) — and ``pos`` the per-slot ``(B,)`` decode offsets, so the
+    causal/window mask is exact per slot on every shard; fully-masked
+    shards contribute weight ``exp(NEG_INF - m_global) == 0`` in the
+    combine.  ``extra_mask`` (``(B, Sl)`` bool) additionally invalidates
+    rows — the paged path's not-owned/unassigned blocks.
     """
     B, _, H, D = q.shape
     K = kc.shape[2]
     G = H // K
     qh = q[:, 0].reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
     s = jnp.einsum("bkgd,bskd->bkgs", qh, kc.astype(jnp.float32))
-    valid = kpos[None, :] <= pos[:, None]                       # (B, Sl)
-    valid &= jnp.where(window > 0,
-                       (pos[:, None] - kpos[None, :]) < window, True)
+    kpos = kpos if kpos.ndim == 2 else kpos[None, :]            # (B|1, Sl)
+    valid = kpos <= pos[:, None]                                # (B, Sl)
+    valid &= jnp.where(window > 0, (pos[:, None] - kpos) < window, True)
+    if extra_mask is not None:
+        valid &= extra_mask
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
@@ -149,3 +160,122 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
                        in_specs=(rep, rep, rep, shd, shd, P(bspec), P()),
                        out_specs=(rep, shd, shd), check_vma=False)
     return fn(q, k_new, v_new, k_cache, v_cache, pos, window)
+
+
+# =====================================================================
+# paged residency: the pool dim takes the model axis
+# =====================================================================
+
+def uses_pool_sharding(mesh, n_blocks: int, model_axis: str = "model") -> bool:
+    """Whether :func:`flash_decode_paged` runs the pool-sharded
+    shard_map path (vs its in-process single-shard combine) — the single
+    dispatch predicate ``ServeEngine.decode_path`` shares for paged
+    caches, mirroring :func:`uses_seq_sharding` for dense ones."""
+    msize = mesh_sizes(mesh).get(model_axis, 1)
+    return msize > 1 and n_blocks % msize == 0
+
+
+def _partial_attend_paged(q, kp, vp, tbl, pos, window, start=0):
+    """Partial (m, l, acc) over the blocks this shard owns.
+
+    A slot can own at most ``min(nb, Nl)`` blocks on this shard, so the
+    table is first *compacted* (owned entries sorted to the front) and
+    only that many blocks are gathered and attended — per-shard reads
+    and FLOPs stay ``~1/msize`` of the cache like the dense seq-sharded
+    path, instead of every shard scoring the full masked view.
+    Not-owned/unassigned rows are masked and contribute
+    ``exp(NEG_INF - m_glob) == 0`` in the combine.
+    """
+    Nl, bl = kp.shape[0], kp.shape[1]
+    B, nb = tbl.shape
+    loc = tbl - start
+    owned = (tbl >= 0) & (loc >= 0) & (loc < Nl)                # (B, nb)
+    cols = min(nb, Nl)
+    if cols < nb:
+        # owned-first stable permutation of each slot's table columns;
+        # the surviving column index still encodes the block's dense-
+        # view position, so kpos rides along per slot
+        order = jnp.argsort(jnp.where(owned, 0, 1), axis=1,
+                            stable=True)[:, :cols]              # (B, cols)
+        loc = jnp.take_along_axis(loc, order, axis=1)
+        owned = jnp.take_along_axis(owned, order, axis=1)
+        blk_pos = order                                         # (B, cols)
+    else:
+        blk_pos = jnp.broadcast_to(jnp.arange(nb), (B, nb))
+    safe = jnp.clip(loc, 0, Nl - 1)
+    kd = kp[safe].reshape(B, cols * bl, *kp.shape[2:])
+    vd = vp[safe].reshape(B, cols * bl, *vp.shape[2:])
+    kpos = (blk_pos[:, :, None] * bl
+            + jnp.arange(bl)[None, None, :]).reshape(B, cols * bl)
+    extra = jnp.repeat(owned, bl, axis=1)
+    return _partial_attend(q, kd, vd, kpos, pos, window, extra_mask=extra)
+
+
+def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
+                       k_new: jax.Array,   # (B, 1, K, D)
+                       v_new: jax.Array,   # (B, 1, K, D)
+                       k_pool: jax.Array,  # (N, bl, K, D) block pool
+                       v_pool: jax.Array,  # (N, bl, K, D)
+                       block_tbl: jax.Array,  # (B, nb) ids; -1 unassigned
+                       pos,                # (B,) per-slot offsets (scalar ok)
+                       window=0,
+                       *,
+                       mesh: jax.sharding.Mesh,
+                       data_axes: Tuple[str, ...] = ("data",),
+                       model_axis: str = "model",
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a block-pool cache sharded on the *pool*
+    dim (a paged cache has no contiguous seq dim to shard — the pool is
+    the unit of placement, so each shard owns ``n_blocks/msize`` blocks
+    and only the owner writes or attends over a block).
+
+    Returns ``(ctx, k_pool', v_pool')`` with ``ctx`` ``(B, 1, H, D)``.
+    Falls back to an unsharded single-shard combine when the model axis
+    cannot shard the pool (size 1 or non-divisible).  ``data_axes`` is
+    accepted for signature parity with :func:`flash_decode` but the
+    batch stays replicated over it — the pool has no batch dim, so
+    batch-sharded appends would diverge the data replicas.  Semantics
+    match :func:`repro.kernels.ref.paged_decode_attention_ref` over the
+    appended pool with ``cache_len = pos + 1``.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    B, N = block_tbl.shape[0], k_pool.shape[0]
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+
+    from repro.models.lm import append_kv_paged
+
+    if not uses_pool_sharding(mesh, N, model_axis):
+        kp = append_kv_paged(k_pool, k_new, pos, block_tbl)
+        vp = append_kv_paged(v_pool, v_new, pos, block_tbl)
+        m, l, acc = _partial_attend_paged(q, kp, vp, block_tbl, pos, window)
+        return _finish(q, l, acc), kp, vp
+
+    # unlike the dense cache (whose batch dim shards over the data axis
+    # alongside the appends), the pool has NO batch dim: it is replicated
+    # across data shards, so batch-sharding the appends would make each
+    # data replica append only its own slots' rows and silently diverge.
+    # Every data shard therefore sees the full batch (B is tiny in
+    # decode) and writes an identical pool.
+    bspec = None
+
+    def local_fn(q, kn, vn, kp, vp, tbl, pos, window):
+        Nl = kp.shape[0]
+        start = jax.lax.axis_index(model_axis).astype(jnp.int32) * Nl
+        kp = append_kv_paged(kp, kn, pos, tbl, start)
+        vp = append_kv_paged(vp, vn, pos, tbl, start)
+        m, l, acc = _partial_attend_paged(q, kp, vp, tbl, pos, window, start)
+        m_glob = jax.lax.pmax(m, model_axis)
+        coef = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * coef, model_axis)
+        acc_glob = jax.lax.psum(acc * coef[..., None], model_axis)
+        return _finish(q, l_glob, acc_glob), kp, vp
+
+    rep = P(bspec, None, None, None)
+    shd = P(model_axis, None, None, None)
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(rep, rep, rep, shd, shd,
+                                 P(bspec, None), P(bspec), P()),
+                       out_specs=(rep, shd, shd), check_vma=False)
+    return fn(q, k_new, v_new, k_pool, v_pool, block_tbl, pos, window)

@@ -98,6 +98,17 @@ CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
     "conv": ("layers", "batch", None, "ssm_inner"),
 }
 
+#: paged residency: k/v are block pools (no batch/seq dims — the pool
+#: dim is the unit of placement) and the block table rides the batch dim
+PAGED_CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "pos": ("batch",),
+    "k": ("layers", "kv_blocks", None, "kv_heads", "head_dim"),
+    "v": ("layers", "kv_blocks", None, "kv_heads", "head_dim"),
+    "block_tbl": ("batch", None),
+    "ssm": ("layers", "batch", "ssm_heads", None, None),
+    "conv": ("layers", "batch", None, "ssm_inner"),
+}
+
 
 def cache_pspecs(plan, arch, cache_shapes: Mapping[str, Any],
                  sizes: Mapping[str, int]) -> Dict[str, P]:
@@ -108,14 +119,25 @@ def cache_pspecs(plan, arch, cache_shapes: Mapping[str, Any],
     where the seq-vs-head_dim spill for flash-decode lives), then
     re-applies divisibility repair against the *runtime* shapes (padded
     kv/ssm heads may differ from the IR).
+
+    A paged cache (marked by its ``block_tbl`` entry) resolves through
+    :data:`PAGED_CACHE_AXES`: the IR placement's seq-dim spill translates
+    to the pool dim (``seq_kv -> kv_blocks`` — the paged analogue the
+    :func:`repro.dist.flash_decode.flash_decode_paged` combine serves).
     """
+    paged = "block_tbl" in cache_shapes
+    axes_map = PAGED_CACHE_AXES if paged else CACHE_AXES
     out: Dict[str, P] = {}
     for key, sds in cache_shapes.items():
-        axes = CACHE_AXES.get(key, tuple(None for _ in sds.shape))
+        axes = axes_map.get(key, tuple(None for _ in sds.shape))
         rules = dict(plan.axis_rules)
+        rules.setdefault("kv_blocks", None)
         placed = plan.placements.get(f"cache.{key}")
         if placed is not None and placed.spec:
-            for ax, assign in zip(axes, placed.spec):
+            ir_axes = CACHE_AXES.get(key, axes)   # placements follow the IR
+            for ax, assign in zip(ir_axes, placed.spec):
+                if ax == "seq_kv" and paged:
+                    ax = "kv_blocks"
                 if ax is not None:
                     rules[ax] = assign
         out[key] = resolve_pspec(rules, sds.shape, axes, sizes)

@@ -85,6 +85,62 @@ def decode_append_ref(
     return out.astype(cache.dtype)
 
 
+def paged_gather_ref(
+    pool: jax.Array,           # (N, bl, K, D) block pool (one layer)
+    tbl: jax.Array,            # (B, nb) block ids per slot; -1 = unassigned
+) -> jax.Array:
+    """Dense view of a paged cache: slot b's row ``i`` is
+    ``pool[tbl[b, i // bl], i % bl]``; unassigned blocks read as zeros.
+
+    Ground truth for every paged consumer (XLA gather path, the Pallas
+    block-table kernel, and the flash-decode paged combine) — paged
+    attention must equal dense attention over this view.
+    """
+    N, bl = pool.shape[:2]
+    safe = jnp.clip(tbl, 0, N - 1)
+    g = pool[safe]                                      # (B, nb, bl, K, D)
+    g = jnp.where((tbl >= 0)[..., None, None, None], g, 0)
+    return g.reshape(tbl.shape[0], tbl.shape[1] * bl, *pool.shape[2:])
+
+
+def paged_append_ref(
+    pool: jax.Array,           # (N, bl, K, D)
+    new: jax.Array,            # (B, 1, K, D)
+    pos: jax.Array,            # (B,) per-slot append offsets (dense view)
+    tbl: jax.Array,            # (B, nb) block table
+) -> jax.Array:
+    """Paged KV-append oracle: ``pool[tbl[b, pos[b]//bl], pos[b]%bl] =
+    new[b, 0]``; a slot whose owning block is unassigned (-1) is a no-op
+    (freed slots never write to the pool)."""
+    B = new.shape[0]
+    N, bl = pool.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    out = pool.astype(jnp.float32)
+    for b in range(B):
+        blk = tbl[b, pos[b] // bl]
+        hot = (jax.nn.one_hot(blk, N, dtype=jnp.float32)[:, None]
+               * jax.nn.one_hot(pos[b] % bl, bl,
+                                dtype=jnp.float32)[None, :])[..., None, None]
+        out = out * (1.0 - hot) + new[b, 0].astype(jnp.float32) * hot
+    return out.astype(pool.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,              # (B, H, D) one token
+    k_pool: jax.Array,         # (N, bl, K, D)
+    v_pool: jax.Array,         # (N, bl, K, D)
+    tbl: jax.Array,            # (B, nb)
+    *,
+    cache_len: jax.Array,      # (B,) or scalar
+    window: int = 0,
+) -> jax.Array:
+    """Decode attention over the paged cache == dense attention over the
+    gathered view (positions past ``cache_len`` are masked either way)."""
+    return decode_attention_ref(
+        q, paged_gather_ref(k_pool, tbl), paged_gather_ref(v_pool, tbl),
+        cache_len=cache_len, window=window)
+
+
 def ssd_scan_ref(
     x: jax.Array,              # (B, S, H, P) fp32
     dt: jax.Array,             # (B, S, H) fp32 (post-softplus)

@@ -1,0 +1,149 @@
+"""``repro plan`` CLI: inspect/diff stored FrozenPlan artifacts by hash.
+
+The content-addressed plan store (:mod:`repro.core.planstore`) is the
+deployment artifact shelf — this is the shelf's inspection tool::
+
+    python -m repro.launch.plan list [--plan-dir DIR]
+    python -m repro.launch.plan show <hash-prefix> [--log]
+    python -m repro.launch.plan diff <hash-prefix> <hash-prefix>
+
+``list`` tabulates every entry (hash, arch, shape, workload dims, key
+decisions); ``show`` prints one artifact's summary + decision log;
+``diff`` compares two artifacts decision-by-decision
+(:func:`repro.core.plan.diff_decision_logs`) — the same diff a resumed
+trainer prints on a plan-hash mismatch, available offline.  Hashes may
+be abbreviated to any unique prefix.  Loads are hash-verified by the
+store; corrupt entries are reported, not silently skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.core import planstore
+from repro.core.plan import FrozenPlan, diff_decision_logs
+
+
+def _entries(plan_dir: Path) -> List[Path]:
+    return sorted(plan_dir.glob("*.json"))
+
+
+def _resolve(plan_dir: Path, prefix: str) -> Path:
+    hits = [f for f in _entries(plan_dir) if f.stem.startswith(prefix)]
+    if not hits:
+        raise SystemExit(f"no stored plan matches {prefix!r} "
+                         f"in {plan_dir}")
+    if len(hits) > 1:
+        names = ", ".join(f.stem[:16] for f in hits)
+        raise SystemExit(f"ambiguous prefix {prefix!r}: {names}")
+    return hits[0]
+
+
+def _load(store: planstore.PlanStore, path: Path) -> FrozenPlan:
+    plan = store.load(path.stem)
+    if plan is None:
+        raise SystemExit(f"{path.name}: corrupt or hash-mismatched entry")
+    return plan
+
+
+_DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
+                  "kv_n_blocks", "moe_impl", "grad_compression")
+
+
+def _dims(p: FrozenPlan) -> str:
+    return (f"{p.shape_kind or '?'} seq={p.seq_len} batch={p.global_batch} "
+            f"mesh={'x'.join(str(s) for s in p.mesh_shape)}")
+
+
+def cmd_list(plan_dir: Path, store: planstore.PlanStore) -> int:
+    entries = _entries(plan_dir)
+    if not entries:
+        print(f"no stored plans in {plan_dir}")
+        return 0
+    print(f"{len(entries)} plan(s) in {plan_dir}")
+    print(f"{'hash':<14} {'arch':<28} {'shape':<14} {'dims':<36} decisions")
+    for f in entries:
+        plan = store.load(f.stem)
+        if plan is None:
+            print(f"{f.stem[:12]:<14} <corrupt or stale-schema entry>")
+            continue
+        dec = ";".join(f"{k}={plan.estimates[k]}" for k in _DECISION_KEYS
+                       if k in plan.estimates)
+        print(f"{plan.content_hash()[:12]:<14} {plan.arch:<28} "
+              f"{plan.shape:<14} {_dims(plan):<36} {dec}")
+    return 0
+
+
+def cmd_show(plan_dir: Path, store: planstore.PlanStore, prefix: str,
+             show_log: bool) -> int:
+    plan = _load(store, _resolve(plan_dir, prefix))
+    print(f"plan {plan.content_hash()}")
+    print(f"  arch={plan.arch} shape={plan.shape} target={plan.target}")
+    print(f"  workload: {_dims(plan)}")
+    print(f"  use_pallas={plan.use_pallas} "
+          f"comm={plan.comm.grad_schedule}"
+          f"{'+int8_ef' if plan.comm.compresses_gradients else ''} "
+          f"remat={plan.comm.remat_policy}")
+    dec = {k: plan.estimates[k] for k in _DECISION_KEYS
+           if k in plan.estimates}
+    if dec:
+        print("  decisions: " + json.dumps(dec, default=str))
+    print(f"  placements={len(plan.placements)} "
+          f"partitions={sorted(plan.partitions)} "
+          f"log_entries={len(plan.log)}")
+    if show_log:
+        for pass_name, subj, decision, why in plan.log:
+            print(f"  [{pass_name}] {subj}: {decision}  ({why})")
+    return 0
+
+
+def cmd_diff(plan_dir: Path, store: planstore.PlanStore,
+             a_prefix: str, b_prefix: str) -> int:
+    a = _load(store, _resolve(plan_dir, a_prefix))
+    b = _load(store, _resolve(plan_dir, b_prefix))
+    if a.content_hash() == b.content_hash():
+        print(f"identical: {a.content_hash()[:12]}")
+        return 0
+    print(f"--- {a.content_hash()[:12]} ({a.arch}@{a.shape}, {_dims(a)})")
+    print(f"+++ {b.content_hash()[:12]} ({b.arch}@{b.shape}, {_dims(b)})")
+    lines = diff_decision_logs(a.log, b.log)
+    for line in lines:
+        print(line)
+    if not lines:
+        print("(decision logs identical — dims/estimates differ)")
+    return 1
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.plan",
+        description="inspect/diff stored plan artifacts by content hash")
+    ap.add_argument("--plan-dir", default="",
+                    help="store directory (default $REPRO_PLAN_DIR or "
+                         "~/.cache/repro/plans)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="tabulate stored artifacts")
+    p_show = sub.add_parser("show", help="one artifact's summary")
+    p_show.add_argument("hash", help="content hash (unique prefix ok)")
+    p_show.add_argument("--log", action="store_true",
+                        help="also print the full decision log")
+    p_diff = sub.add_parser("diff", help="decision-log diff of two artifacts")
+    p_diff.add_argument("hash_a")
+    p_diff.add_argument("hash_b")
+    args = ap.parse_args(argv)
+
+    store = planstore.get_store(args.plan_dir or None)
+    plan_dir = store.plan_dir
+    if args.cmd == "list":
+        return cmd_list(plan_dir, store)
+    if args.cmd == "show":
+        return cmd_show(plan_dir, store, args.hash, args.log)
+    return cmd_diff(plan_dir, store, args.hash_a, args.hash_b)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

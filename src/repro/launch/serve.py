@@ -74,7 +74,8 @@ def main() -> None:
         engine = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh,
                                        seed=args.seed)
         print(f"plan {plan.content_hash()[:12]} decode_impl="
-              f"{plan.estimates.get('decode_impl', 'xla')} -> engine "
+              f"{plan.estimates.get('decode_impl', 'xla')} "
+              f"kv_residency={engine.kv_residency} -> engine "
               f"decode_path={engine.decode_path} on mesh {d}x{m}")
     else:
         params = init_params(arch, jax.random.PRNGKey(0))

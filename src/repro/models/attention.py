@@ -142,6 +142,31 @@ def attention_decode(
     return gqa_context(p, v_cache).astype(q.dtype)        # (B,1,H,hd)
 
 
+def attention_decode_paged(
+    q: jax.Array,              # (B, 1, H, hd) — post-RoPE
+    k_pool: jax.Array,         # (N, bl, K, hd) block pool (one layer)
+    v_pool: jax.Array,         # (N, bl, K, hd)
+    block_tbl: jax.Array,      # (B, nb) block ids; -1 = unassigned
+    *,
+    cache_len: jax.Array,      # scalar or (B,): number of valid positions
+    window=0,
+) -> jax.Array:
+    """One-token decode against a paged cache (XLA gather path).
+
+    Gathers each slot's blocks into a dense per-slot view and reuses
+    :func:`attention_decode`; positions past ``cache_len`` are masked, so
+    stale pool rows (from a block's previous tenant) and the clamped
+    block-0 read of unassigned entries never reach the softmax.  Oracle:
+    :func:`repro.kernels.ref.paged_decode_attention_ref`.
+    """
+    N, bl = k_pool.shape[0], k_pool.shape[1]
+    B, nb = block_tbl.shape
+    safe = jnp.clip(block_tbl, 0, N - 1)
+    k = k_pool[safe].reshape(B, nb * bl, *k_pool.shape[2:])
+    v = v_pool[safe].reshape(B, nb * bl, *v_pool.shape[2:])
+    return attention_decode(q, k, v, cache_len=cache_len, window=window)
+
+
 def project_qkv(
     x: jax.Array,
     p: AttnParams,

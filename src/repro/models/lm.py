@@ -523,6 +523,62 @@ def init_cache(arch: ArchConfig, batch_size: int, max_len: int,
     return cache
 
 
+def init_paged_cache(arch: ArchConfig, batch_size: int, max_len: int,
+                     block_len: int, n_blocks: int,
+                     dtype=jnp.bfloat16, ssm_heads: int = 0,
+                     kv_heads: int = 0) -> Dict[str, Any]:
+    """Paged session state: the KV stripes become a block pool.
+
+    ``k``/``v`` are ``(L, n_blocks, block_len, K, hd)`` pools shared by
+    all slots — one block id addresses the same block in every layer —
+    and ``block_tbl`` is the per-slot ``(B, ceil(max_len/block_len))``
+    table mapping sequence positions to pool blocks (-1 = unassigned).
+    SSM/conv states stay dense per-slot (they are O(1) in seq).  The
+    geometry (block_len, n_blocks) is a plan decision
+    (``DataOrganizationPass`` via ``costmodel.kv_block_geometry``).
+    """
+    L = arch.n_layers
+    Hs = ssm_heads or arch.ssm_heads
+    nb = -(-max_len // block_len)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch_size,), jnp.int32)}
+    if arch.has_attention:
+        K, hd = kv_heads or arch.n_kv_heads, arch.hd
+        cache["k"] = jnp.zeros((L, n_blocks, block_len, K, hd), dtype)
+        cache["v"] = jnp.zeros((L, n_blocks, block_len, K, hd), dtype)
+        cache["block_tbl"] = jnp.full((batch_size, nb), -1, jnp.int32)
+    if arch.has_ssm:
+        cache["ssm"] = jnp.zeros(
+            (L, batch_size, Hs, arch.ssm_head_dim, arch.ssm_state),
+            jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (L, batch_size, arch.ssm_conv,
+             Hs * arch.ssm_head_dim + 2 * arch.ssm_n_groups * arch.ssm_state),
+            jnp.bfloat16)
+    return cache
+
+
+def append_kv_paged(pool: jax.Array, new: jax.Array, pos: jax.Array,
+                    tbl: jax.Array, start=0) -> jax.Array:
+    """Paged KV append: write ``new[b]`` into slot b's owning block.
+
+    ``pool`` is ``(n_blocks, block_len, K, hd)``, ``new`` ``(B, 1, K,
+    hd)``, ``pos`` ``(B,)`` dense-view offsets, ``tbl`` ``(B, nb)``.
+    Slots whose owning table entry is unassigned (-1) are dropped — a
+    freed slot's dummy decode never touches the pool.  ``start`` is the
+    caller's first global block id when ``pool`` is one shard of a
+    sharded pool (``dist.flash_decode.flash_decode_paged``): blocks
+    owned elsewhere are dropped too.  Oracle:
+    :func:`repro.kernels.ref.paged_append_ref`.
+    """
+    N, bl = pool.shape[0], pool.shape[1]
+    blk = jnp.take_along_axis(tbl, (pos // bl)[:, None], axis=1)[:, 0] - start
+    # scatter mode="drop" still *wraps* negative indices, so route
+    # unassigned/off-shard entries to an always-out-of-range sentinel
+    blk = jnp.where(blk < 0, N, blk)
+    return pool.at[blk, pos % bl].set(new[:, 0].astype(pool.dtype),
+                                      mode="drop")
+
+
 def _flatten_groups(arch, params):
     """Stacked per-layer params (group-interleaved archs -> per-layer)."""
     g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
@@ -556,6 +612,7 @@ def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
     windows = _window_schedule(arch) if arch.has_attention else \
         jnp.zeros((arch.n_layers,), jnp.int32)
     blocks, g = _flatten_groups(arch, params)
+    block_tbl = cache.get("block_tbl")        # paged residency marker
 
     def layer(x, grp, w, kc, vc, sc, cc):
         """One layer of decode; returns (x, new kc/vc/sc/cc)."""
@@ -571,10 +628,16 @@ def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
                 h, ap, Hq, ap.wk.shape[-1] // arch.hd, arch.hd, positions,
                 arch.rope_theta, arch.mrope_sections, arch.norm_eps)
             if cfg.decode_impl == "shard_map_flash" and cfg.mesh is not None:
-                from repro.dist.flash_decode import flash_decode
-                ctx, kc, vc = flash_decode(
-                    q, k, v, kc, vc, pos, w, mesh=cfg.mesh,
-                    data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+                if block_tbl is not None:
+                    from repro.dist.flash_decode import flash_decode_paged
+                    ctx, kc, vc = flash_decode_paged(
+                        q, k, v, kc, vc, block_tbl, pos, w, mesh=cfg.mesh,
+                        data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+                else:
+                    from repro.dist.flash_decode import flash_decode
+                    ctx, kc, vc = flash_decode(
+                        q, k, v, kc, vc, pos, w, mesh=cfg.mesh,
+                        data_axes=cfg.data_axes, model_axis=cfg.model_axis)
             else:
                 if not cfg.shard_heads:
                     pass
@@ -589,10 +652,17 @@ def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
                     q = _hint(q, cfg, None, None, "rep", cfg.model_axis)
                     k = _hint(k, cfg, None, None, "rep", cfg.model_axis)
                     v = _hint(v, cfg, None, None, "rep", cfg.model_axis)
-                kc = append_kv(kc, k, pos)
-                vc = append_kv(vc, v, pos)
-                ctx = attn_mod.attention_decode(q, kc, vc, cache_len=pos + 1,
-                                                window=w)
+                if block_tbl is not None:
+                    kc = append_kv_paged(kc, k, pos, block_tbl)
+                    vc = append_kv_paged(vc, v, pos, block_tbl)
+                    ctx = attn_mod.attention_decode_paged(
+                        q, kc, vc, block_tbl, cache_len=pos + 1, window=w)
+                else:
+                    kc = append_kv(kc, k, pos)
+                    vc = append_kv(vc, v, pos)
+                    ctx = attn_mod.attention_decode(q, kc, vc,
+                                                    cache_len=pos + 1,
+                                                    window=w)
             out = out + ctx.reshape(B, 1, -1) @ ap.wo
         if arch.has_ssm:
             sp = SSMParams(**grp["ssm"])

@@ -4,16 +4,28 @@ The session cache is the template's ``cache.kv`` component: allocated
 once at engine start (shape from the plan), slots assigned to requests,
 freed on completion — residency management, not reallocation.
 
-Scheduling: waiting requests are prefilled (padded to the bucket length)
-into free slots; every engine tick decodes one token for all active
-slots.  Positions are **per slot** (``cache["pos"]`` is ``(B,)``): a
-continuous batch mixes prompt lengths, so each slot appends KV and masks
-attention at its own offset — an engine-global scalar position silently
-corrupts every slot whose length differs from the batch max.  Freed
-slots are masked to ``(token 0, pos 0)`` so their stale KV never flows
-into a live decode.  Greedy or temperature sampling; sampling threads
-one engine PRNG key (``seed=``), split per tick and per slot, so runs
-are reproducible and slots never share a key within a tick.
+Scheduling: waiting requests are admitted in same-length buckets — every
+pending prompt of the head-of-line length that fits a free slot (and,
+when paged, the block pool) is prefilled in ONE jitted call — then every
+engine tick decodes one token for all active slots.  Positions are
+**per slot** (``cache["pos"]`` is ``(B,)``): a continuous batch mixes
+prompt lengths, so each slot appends KV and masks attention at its own
+offset — an engine-global scalar position silently corrupts every slot
+whose length differs from the batch max.  Freed slots are masked to
+``(token 0, pos 0)`` so their stale KV never flows into a live decode.
+Greedy or temperature sampling; sampling threads one engine PRNG key
+(``seed=``), split per tick and per slot, so runs are reproducible and
+slots never share a key within a tick.
+
+KV residency is a plan decision (``kv_residency`` in the artifact):
+``dense`` keeps the classic per-slot ``max_len`` stripes; ``paged``
+allocates a block pool (``lm.init_paged_cache``) whose geometry the
+data-organization pass chose, hands each admitted request exactly the
+blocks it can ever touch, and *returns them to the pool on finish* —
+real reclamation, so slot churn frees memory instead of leaving masked
+rows resident.  When the pool cannot cover the head-of-line request,
+admission waits for a finisher (no over-subscription, no mid-flight
+eviction).
 
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
@@ -30,7 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +62,7 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    blocks: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
     t_first: float = 0.0
@@ -58,12 +72,46 @@ class Request:
 class ServeEngine:
     def __init__(self, arch: ArchConfig, params, cfg: RunCfg,
                  max_batch: int = 8, max_len: int = 512,
-                 ssm_heads: int = 0, kv_heads: int = 0, seed: int = 0):
+                 ssm_heads: int = 0, kv_heads: int = 0, seed: int = 0,
+                 kv_residency: str = "dense", kv_block_len: int = 0,
+                 kv_n_blocks: int = 0):
         self.arch, self.params, self.cfg = arch, params, cfg
         self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
-        self.cache = lm.init_cache(arch, max_batch, max_len,
-                                   ssm_heads=ssm_heads, kv_heads=kv_heads)
+        # paged residency only exists for attention caches; an SSM-only
+        # arch has no KV stripes to page (its states are O(1) in seq)
+        self.kv_residency = ("paged" if kv_residency == "paged"
+                             and arch.has_attention else "dense")
+        if self.kv_residency == "paged":
+            from repro.core.costmodel import kv_block_len as _default_bl
+            self.block_len = kv_block_len or _default_bl(max_len)
+            per_seq = -(-max_len // self.block_len)
+            # never larger than this engine's slots can ever pin (a plan
+            # sized for a bigger deployment must not balloon a small one);
+            # a plan-shrunk (budget-capped) pool stays shrunk
+            cap = max_batch * per_seq
+            n = min(kv_n_blocks, cap) if kv_n_blocks else cap
+            if cfg.mesh is not None:
+                # preserve the plan's model-axis divisibility: a clamp
+                # that breaks it would silently downgrade the pool-
+                # sharded decode to the single-shard combine AND
+                # replicate the pool on every model shard
+                from repro.dist.sharding import mesh_sizes
+                msize = mesh_sizes(cfg.mesh).get(cfg.model_axis, 1)
+                if msize > 1 and kv_n_blocks and kv_n_blocks % msize == 0 \
+                        and n % msize:
+                    n = min(kv_n_blocks, msize * (-(-n // msize)))
+            self.n_blocks = n
+            self.cache = lm.init_paged_cache(
+                arch, max_batch, max_len, self.block_len, self.n_blocks,
+                ssm_heads=ssm_heads, kv_heads=kv_heads)
+            self._free_blocks = list(range(self.n_blocks))
+        else:
+            self.block_len = 0
+            self.n_blocks = 0
+            self.cache = lm.init_cache(arch, max_batch, max_len,
+                                       ssm_heads=ssm_heads, kv_heads=kv_heads)
+            self._free_blocks = []
         self.free_slots = list(range(max_batch))
         self.active: Dict[int, Request] = {}
         self.pending: List[Request] = []
@@ -74,6 +122,10 @@ class ServeEngine:
         self.slot_len = np.zeros((max_batch,), np.int32)
         self._key = jax.random.PRNGKey(seed)
         self._pos_sharding = None      # set by _place_on_mesh()
+        # admission telemetry: bucketed prefill batch sizes per call
+        # (bounded — long-running engines must not accumulate history)
+        self.prefill_calls = 0
+        self.prefill_batches: Deque[int] = deque(maxlen=1024)
 
         self._decode = jax.jit(
             lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
@@ -85,10 +137,11 @@ class ServeEngine:
     def decode_path(self) -> str:
         """The decode implementation ticks actually run through.
 
-        ``"shard_map_flash"`` only when the seq-sharded path really
-        executes; ``"flash"`` when flash_decode's internal single-shard
-        combine takes over (model axis of size 1, or max_len not
-        divisible by it); ``"xla"`` when no mesh was provided.
+        ``"shard_map_flash"`` only when the sharded path really
+        executes; ``"flash"`` when the internal single-shard combine
+        takes over — model axis of size 1, or the sharded dim not
+        divisible by it (``max_len`` for a dense cache, ``n_blocks``
+        for a paged pool); ``"xla"`` when no mesh was provided.
         """
         impl = self.cfg.decode_impl
         if impl == "xla":
@@ -96,9 +149,14 @@ class ServeEngine:
         if self.cfg.mesh is None:
             return "xla"               # lm.decode_step's own guard
         if impl == "shard_map_flash":
-            from repro.dist.flash_decode import uses_seq_sharding
-            if not uses_seq_sharding(self.cfg.mesh, self.max_len,
-                                     self.cfg.model_axis):
+            from repro.dist.flash_decode import (uses_pool_sharding,
+                                                 uses_seq_sharding)
+            sharded = (uses_pool_sharding(self.cfg.mesh, self.n_blocks,
+                                          self.cfg.model_axis)
+                       if self.kv_residency == "paged" else
+                       uses_seq_sharding(self.cfg.mesh, self.max_len,
+                                         self.cfg.model_axis))
+            if not sharded:
                 return "flash"         # flash_decode's single-shard path
         return impl
 
@@ -124,9 +182,40 @@ class ServeEngine:
         single-process, so a plan that chose the seq-sharded decode
         falls back to the XLA decode path (the sharding decision needs
         a real mesh).
+
+        Workload-dims compatibility is validated instead of silently
+        sizing the cache from stale dims: a non-decode plan has no
+        serving dims at all (both overrides are then required), and
+        overrides *larger* than the dims the plan was specialized for
+        are rejected — the pass sized the KV memory (and, for paged
+        residency, the block pool) from those dims, so a bigger runtime
+        cache needs a respecialized plan, not a quiet under-allocation.
         """
         from repro.core.passes.lowering import build_run_cfg
         arch = arch if arch is not None else get_arch(plan.arch)
+        if plan.shape_kind != "decode":
+            if max_batch is None or max_len is None:
+                raise ValueError(
+                    f"plan {plan.content_hash()[:12]} was specialized for "
+                    f"shape_kind={plan.shape_kind!r}, not a decode workload; "
+                    f"its dims (seq_len={plan.seq_len}, "
+                    f"global_batch={plan.global_batch}) cannot size a "
+                    "serving cache — pass max_batch= and max_len= "
+                    "explicitly, or specialize a decode shape")
+        else:
+            if max_len is not None and plan.seq_len and max_len > plan.seq_len:
+                raise ValueError(
+                    f"max_len={max_len} exceeds the seq_len={plan.seq_len} "
+                    f"this plan was specialized for — the pass sized the KV "
+                    "memory from that dim; respecialize with the larger "
+                    "decode shape instead of overriding past it")
+            if max_batch is not None and plan.global_batch \
+                    and max_batch > plan.global_batch:
+                raise ValueError(
+                    f"max_batch={max_batch} exceeds the global_batch="
+                    f"{plan.global_batch} this plan was specialized for — "
+                    "respecialize with the larger decode shape instead of "
+                    "overriding past it")
         cfg = build_run_cfg(plan, arch, mesh)
         if mesh is None and cfg.decode_impl != "xla":
             cfg = dataclasses.replace(cfg, decode_impl="xla")
@@ -138,7 +227,11 @@ class ServeEngine:
             max_len = plan.seq_len or 512
         eng = cls(arch, params, cfg, max_batch=max_batch, max_len=max_len,
                   ssm_heads=cfg.ssm_heads_padded, kv_heads=cfg.kv_heads_padded,
-                  seed=seed)
+                  seed=seed,
+                  kv_residency=str(plan.estimates.get("kv_residency",
+                                                      "dense")),
+                  kv_block_len=int(plan.estimates.get("kv_block_len", 0)),
+                  kv_n_blocks=int(plan.estimates.get("kv_n_blocks", 0)))
         eng.plan = plan
         if mesh is not None:
             eng._place_on_mesh(mesh)
@@ -177,48 +270,153 @@ class ServeEngine:
                 f"request needs {len(prompt)} prompt + {max_new_tokens} new "
                 f"tokens > max_len={self.max_len} cache rows; raise max_len "
                 "or lower max_new_tokens")
+        if self.kv_residency == "paged":
+            need = self._blocks_needed(len(prompt), max_new_tokens)
+            if need > self.n_blocks:
+                # admission would wait forever for frees that can never
+                # cover it — refuse loudly instead of a silent hang
+                raise ValueError(
+                    f"request needs {need} blocks of {self.block_len} rows "
+                    f"but the pool holds only {self.n_blocks}; raise "
+                    "kv_n_blocks or lower max_new_tokens")
         r = Request(self._rid, prompt, max_new_tokens, temperature,
                     t_submit=time.time())
         self._rid += 1
         self.pending.append(r)
         return r.rid
 
+    def _blocks_needed(self, plen: int, max_new: int) -> int:
+        """Blocks covering every cache row the request can ever touch
+        (``plen`` prompt rows + one append per decode tick).  A request
+        the prefill sample already satisfies (``max_new <= 1``) finishes
+        before any cache write and needs none."""
+        if max_new <= 1:
+            return 0
+        return -(-(plen + max_new) // self.block_len)
+
+    def block_stats(self) -> Dict[str, int]:
+        """Pool accounting: dense engines report an empty (0-block) pool."""
+        free = len(self._free_blocks)
+        return {"total": self.n_blocks, "free": free,
+                "in_use": self.n_blocks - free}
+
     def _admit(self) -> None:
-        """Prefill pending requests into free slots (one at a time batch=1
-        prefill; production would bucket same-length prompts)."""
+        """Bucketed batched admission: all pending prompts of the
+        head-of-line's length that fit a free slot (and, when paged, the
+        block pool) are prefilled in ONE jitted call.  When the pool
+        cannot cover the head request, admission waits for a finisher —
+        head-of-line blocking, so exhaustion delays rather than starves.
+        """
         while self.pending and self.free_slots:
-            r = self.pending.pop(0)
-            slot = self.free_slots.pop(0)
-            r.slot = slot
-            plen = len(r.prompt)
-            logits, cache1 = self._prefill(
-                self.params, {"tokens": r.prompt[None, :]})
-            tok = self._sample(logits[0], r.temperature, self._next_key())
+            head = self.pending[0]
+            plen = len(head.prompt)
+            if self.kv_residency == "paged" and \
+                    self._blocks_needed(plen, head.max_new_tokens) \
+                    > len(self._free_blocks):
+                return                 # pool exhausted: wait for frees
+            group: List[Request] = []
+            rest: List[Request] = []
+            budget = len(self._free_blocks)
+            for r in self.pending:
+                need = (self._blocks_needed(len(r.prompt), r.max_new_tokens)
+                        if self.kv_residency == "paged" else 0)
+                if (len(group) < len(self.free_slots)
+                        and len(r.prompt) == plen and need <= budget):
+                    budget -= need
+                    group.append(r)
+                else:
+                    rest.append(r)
+            self.pending = rest
+            self._admit_group(group)
+
+    def _admit_group(self, group: List[Request]) -> None:
+        """One jitted prefill for a same-length bucket of requests.
+
+        The batch dim is padded to the next power of two (dummy rows
+        repeat the first prompt and are discarded), so each prompt
+        length compiles at most ``log2(max_batch)`` prefill programs
+        instead of one per arrival-group size."""
+        toks = np.stack([r.prompt for r in group])
+        padded = 1
+        while padded < len(group):
+            padded *= 2
+        padded = min(padded, self.max_batch)   # never a batch no engine fills
+        if padded > len(group):
+            toks = np.concatenate(
+                [toks, np.repeat(toks[:1], padded - len(group), axis=0)])
+        logits, cacheg = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
+        self.prefill_calls += 1
+        self.prefill_batches.append(len(group))
+        keys = jax.random.split(self._next_key(), len(group))
+        live: List[Request] = []
+        idxs: List[int] = []
+        for i, r in enumerate(group):
+            tok = self._sample(logits[i], r.temperature, keys[i])
             r.out_tokens.append(int(tok))
             r.t_first = time.time()
             if len(r.out_tokens) >= r.max_new_tokens:
                 # the prefill sample already met the budget: finish now —
-                # no decode tick to over-generate on, no cache-slot copy
+                # no decode tick to over-generate on, no cache copy, and
+                # (paged) no blocks ever allocated
                 r.done = True
                 r.t_done = r.t_first
                 self.finished.append(r)
-                self.free_slots.append(slot)
-                continue
-            # copy the single-sequence cache into the engine cache slot
-            for key in ("k", "v", "ssm", "conv"):
-                if key in self.cache:
-                    upd = cache1[key]
-                    pad = self.max_len - upd.shape[2] if key in ("k", "v") else 0
-                    if key in ("k", "v"):
-                        upd = jnp.pad(upd, ((0, 0), (0, 0), (0, pad),
-                                            (0, 0), (0, 0)))[:, 0] \
-                            if upd.shape[2] != self.max_len else upd[:, 0]
-                        self.cache[key] = self.cache[key].at[:, slot].set(upd)
-                    else:
-                        self.cache[key] = self.cache[key].at[:, slot].set(
-                            upd[:, 0])
+            else:
+                live.append(r)
+                idxs.append(i)
+        if not live:
+            return
+        plen = len(live[0].prompt)
+        slots = np.asarray([self.free_slots.pop(0) for _ in live], np.int32)
+        gidx = np.asarray(idxs, np.int32)
+        if self.arch.has_attention:
+            if self.kv_residency == "paged":
+                self._scatter_paged_prefill(live, slots, gidx, cacheg, plen)
+            else:
+                for key in ("k", "v"):
+                    self.cache[key] = self.cache[key].at[:, slots].set(
+                        cacheg[key][:, gidx])
+        for key in ("ssm", "conv"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, slots].set(
+                    cacheg[key][:, gidx])
+        for slot, r in zip(slots, live):
+            r.slot = int(slot)
             self.slot_len[slot] = plen
-            self.active[slot] = r
+            self.active[int(slot)] = r
+
+    def _scatter_paged_prefill(self, live: List[Request], slots: np.ndarray,
+                               gidx: np.ndarray, cacheg, plen: int) -> None:
+        """Move a bucket's prefilled KV rows into their pool blocks.
+
+        Each survivor gets its full block budget now (prompt + every
+        decode append), the prompt rows are scattered block-wise into
+        the pool in one gather/reshape per cache tensor, and the block
+        table rows are installed (-1 padding past the allocation).
+        """
+        bl = self.block_len
+        nbp = -(-plen // bl)               # blocks holding prompt rows
+        nb_cols = self.cache["block_tbl"].shape[1]
+        rows = np.full((len(live), nb_cols), -1, np.int32)
+        prompt_blocks: List[int] = []
+        for i, r in enumerate(live):
+            need = self._blocks_needed(len(r.prompt), r.max_new_tokens)
+            r.blocks = [self._free_blocks.pop(0) for _ in range(need)]
+            rows[i, :need] = r.blocks
+            prompt_blocks.extend(r.blocks[:nbp])
+        blk_ids = np.asarray(prompt_blocks, np.int32)
+        for key in ("k", "v"):
+            upd = cacheg[key][:, gidx, :nbp * bl]   # (L, Bs, <=nbp*bl, K, hd)
+            L = upd.shape[0]
+            if upd.shape[2] < nbp * bl:             # max_len not block-aligned
+                upd = jnp.pad(upd, ((0, 0), (0, 0),
+                                    (0, nbp * bl - upd.shape[2]),
+                                    (0, 0), (0, 0)))
+            upd = upd.reshape(L, len(live) * nbp, bl, *upd.shape[3:])
+            self.cache[key] = self.cache[key].at[:, blk_ids].set(upd)
+        self.cache["block_tbl"] = \
+            self.cache["block_tbl"].at[slots].set(jnp.asarray(rows))
 
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
@@ -265,9 +463,24 @@ class ServeEngine:
                 finished.append(r)
                 self.finished.append(r)
                 del self.active[slot]
-                self.free_slots.append(slot)
-                self.slot_len[slot] = 0
+                self._release_slot(slot, r)
         return len(finished)
+
+    def _release_slot(self, slot: int, r: Request) -> None:
+        """Return the slot — and, when paged, its blocks — to the pool.
+
+        This is real reclamation: the block ids go back on the free list
+        and the table row is cleared to -1, so the freed slot's decode
+        dummy neither writes to the pool (unassigned appends drop) nor
+        pins memory the next admission could use.
+        """
+        self.free_slots.append(slot)
+        self.slot_len[slot] = 0
+        if self.kv_residency == "paged" and r.blocks:
+            self._free_blocks.extend(r.blocks)
+            r.blocks = []
+            self.cache["block_tbl"] = \
+                self.cache["block_tbl"].at[slot].set(-1)
 
     def run_until_idle(self, max_ticks: int = 1000) -> List[Request]:
         ticks = 0

@@ -52,10 +52,17 @@ def test_lowered_serve_step_executes(name):
     plan = _plan(arch, DEC, mesh)
     step = lower_serve_step(plan, arch, DEC, mesh)
     fn = step.jit()
-    from repro.core.passes.lowering import build_run_cfg, _padded
-    from repro.models import lm
+    from repro.core.passes.lowering import _padded, init_plan_cache
     params = init_params(arch, jax.random.PRNGKey(0), *_padded(plan))
-    cache = lm.init_cache(arch, DEC.global_batch, DEC.seq_len)
+    # the cache must match the plan's residency decision (a decode plan
+    # for an attention arch now carries a paged block pool)
+    cache = init_plan_cache(plan, arch, DEC.global_batch, DEC.seq_len)
+    if "block_tbl" in cache:
+        assert plan.estimates["kv_residency"] == "paged"
+        nb = cache["block_tbl"].shape[1]
+        cache["block_tbl"] = jnp.arange(
+            DEC.global_batch * nb, dtype=jnp.int32).reshape(
+                DEC.global_batch, nb)
     tokens = {"tokens": jnp.ones((DEC.global_batch, 1), jnp.int32)}
     logits, cache = fn(params, cache, tokens)
     assert logits.shape[0] == DEC.global_batch

@@ -92,9 +92,13 @@ def test_serve_from_plan_shard_map_flash_end_to_end():
         arch = dataclasses.replace(get_arch("qwen3-8b").reduced(),
                                    n_kv_heads=1)
         shape = ShapeConfig("serve_md", "decode", 32, 2)
+        # this test pins the DENSE seq-sharded path; the paged pool-
+        # sharded run is test_serve_from_plan_paged_pool_sharded
         plan = specialize(arch, shape, mesh_axes=("data", "model"),
-                          mesh_shape=(1, 8), cache=False)
+                          mesh_shape=(1, 8), cache=False,
+                          kv_residency="dense")
         assert plan.estimates.get("decode_impl") == "shard_map_flash"
+        assert plan.estimates.get("kv_residency") == "dense"
         mesh = jax.make_mesh((1, 8), ("data", "model"))
         params = lm.init_params(arch, jax.random.PRNGKey(0),
                                 *plan.padded_sizes())
@@ -115,6 +119,101 @@ def test_serve_from_plan_shard_map_flash_end_to_end():
         for p in prompts:
             eng2 = ServeEngine.from_plan(plan, params, arch=arch,
                                          mesh=mesh, max_batch=1)
+            assert eng2.decode_path == "shard_map_flash"
+            eng2.submit(p, max_new_tokens=5)
+            done2 = eng2.run_until_idle(max_ticks=32)
+            assert a[p.tobytes()] == done2[0].out_tokens, (
+                p, a[p.tobytes()], done2[0].out_tokens)
+        print("OK")
+    """, timeout=600)
+
+
+def test_flash_decode_paged_pool_sharded_matches_oracle():
+    """The paged combine over a pool sharded 8 ways on the model axis:
+    owning-shard appends + per-shard partial softmax over owned blocks
+    == the gather oracle, for staggered tables with unassigned tails."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.dist.flash_decode import flash_decode_paged
+        from repro.kernels import ref
+        # data=2 with B divisible by it: the pool (no batch dim) is
+        # replicated over the data axis, so every data shard must append
+        # the FULL batch or the replicas diverge — regression for the
+        # batch-sharded-append bug
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, H, K, D, bl, N = 4, 8, 4, 16, 8, 16       # 4 blocks per shard
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, D))
+        kn = jax.random.normal(ks[1], (B, 1, K, D))
+        vn = jax.random.normal(ks[2], (B, 1, K, D))
+        kp = jax.random.normal(ks[3], (N, bl, K, D))
+        vp = jax.random.normal(ks[4], (N, bl, K, D))
+        tbl = jnp.asarray([[0, 9, 3, -1], [14, 2, -1, -1],
+                           [5, 7, 11, 13], [1, 6, -1, -1]], jnp.int32)
+        for pos_list, win in (([16, 8, 31, 10], 0), ([20, 14, 27, 4], 8)):
+            pos = jnp.asarray(pos_list, jnp.int32)
+            ctx, kp2, vp2 = jax.jit(
+                lambda *a: flash_decode_paged(*a, mesh=mesh))(
+                    q, kn, vn, kp, vp, tbl, pos, win)
+            kr = ref.paged_append_ref(kp, kn, pos, tbl)
+            vr = ref.paged_append_ref(vp, vn, pos, tbl)
+            r = ref.paged_decode_attention_ref(
+                q[:, 0], kr, vr, tbl, cache_len=pos + 1, window=win)
+            err = float(jnp.abs(ctx[:, 0] - r).max())
+            assert err < 1e-5, (pos_list, win, err)
+            assert bool(jnp.allclose(kp2, kr)), "paged append corrupted"
+            assert bool(jnp.allclose(vp2, vr))
+        print("OK")
+    """)
+
+
+def test_serve_from_plan_paged_pool_sharded():
+    """A paged decode plan served end-to-end on an 8-wide model axis:
+    the pool dim really lands sharded, the engine reports the pool-
+    sharded path, blocks recycle across a staggered mix, and tokens
+    match sequential single-request serving through the same path."""
+    run_subprocess("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import ShapeConfig, get_arch
+        from repro.core.pipeline import specialize
+        from repro.models import lm
+        from repro.serve.engine import ServeEngine
+
+        arch = dataclasses.replace(get_arch("qwen3-8b").reduced(),
+                                   n_kv_heads=1)
+        shape = ShapeConfig("serve_paged_md", "decode", 64, 4)
+        plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                          mesh_shape=(1, 8), cache=False)
+        assert plan.estimates.get("decode_impl") == "shard_map_flash"
+        assert plan.estimates.get("kv_residency") == "paged"
+        assert plan.estimates["kv_n_blocks"] % 8 == 0   # pool shardable
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        params = lm.init_params(arch, jax.random.PRNGKey(0),
+                                *plan.padded_sizes())
+        eng = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh)
+        assert eng.kv_residency == "paged"
+        assert eng.decode_path == "shard_map_flash", eng.decode_path
+        # the block pool really lands sharded on its pool dim
+        kshard = eng.cache["k"].sharding.spec
+        assert kshard[1] == "model", kshard
+        prompts = [np.arange(5, dtype=np.int32) % arch.vocab_size,
+                   (np.arange(11, dtype=np.int32) * 3) % arch.vocab_size,
+                   (np.arange(8, dtype=np.int32) * 7) % arch.vocab_size,
+                   (np.arange(11, dtype=np.int32) * 5) % arch.vocab_size,
+                   (np.arange(5, dtype=np.int32) * 2) % arch.vocab_size]
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        done = eng.run_until_idle(max_ticks=64)
+        assert len(done) == 5 and all(len(r.out_tokens) == 5 for r in done)
+        stats = eng.block_stats()
+        assert stats["free"] == stats["total"], stats
+        a = {r.prompt.tobytes(): r.out_tokens for r in done}
+        # sequential single-request runs through the SAME pool-sharded
+        # path (same pool size -> same dispatch; a max_batch=1 engine
+        # would clamp the pool below the 8-way divisibility)
+        for p in prompts[:3]:
+            eng2 = ServeEngine.from_plan(plan, params, arch=arch,
+                                         mesh=mesh)
             assert eng2.decode_path == "shard_map_flash"
             eng2.submit(p, max_new_tokens=5)
             done2 = eng2.run_until_idle(max_ticks=32)

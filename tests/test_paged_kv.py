@@ -1,0 +1,260 @@
+"""Paged KV residency: block-pool kernels vs oracles, the plan decision,
+and the `repro plan` CLI.
+
+The paged contract: attention/append over (pool, block table) must equal
+the dense computation over the gathered view (`ref.paged_gather_ref`),
+for every implementation — the XLA gather path, the scalar-prefetch
+Pallas kernel, and the flash-decode paged combine (single-shard here;
+the pool-sharded shard_map run lives in test_multidevice).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.models import lm
+from repro.models.attention import attention_decode_paged
+
+
+def _pool_case(key, B=3, H=4, K=2, D=16, bl=8, N=10, nb=4, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, D)).astype(dtype)
+    kp = jax.random.normal(ks[1], (N, bl, K, D)).astype(dtype)
+    vp = jax.random.normal(ks[2], (N, bl, K, D)).astype(dtype)
+    kn = jax.random.normal(ks[3], (B, 1, K, D)).astype(dtype)
+    vn = jax.random.normal(ks[4], (B, 1, K, D)).astype(dtype)
+    # staggered tables: unassigned tails, non-contiguous blocks
+    tbl = jnp.asarray([[0, 3, 7, -1], [5, 1, -1, -1], [2, 4, 6, 8]][:B],
+                      jnp.int32)
+    cl = jnp.asarray([17, 9, 32][:B], jnp.int32)
+    return q, kp, vp, kn, vn, tbl, cl
+
+
+def test_paged_gather_ref_dense_equivalence():
+    """The gather oracle really is the dense view: scattering a dense
+    cache into blocks and gathering back is the identity (valid rows)."""
+    key = jax.random.PRNGKey(0)
+    B, S, K, D, bl = 2, 32, 2, 8, 8
+    dense = jax.random.normal(key, (B, S, K, D))
+    nb = S // bl
+    # slot 0 takes blocks 0..3, slot 1 blocks 4..7
+    tbl = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    pool = dense.reshape(B * nb, bl, K, D)
+    got = ref.paged_gather_ref(pool, tbl)
+    assert np.allclose(np.asarray(got), np.asarray(dense))
+    # unassigned entries gather as zeros
+    got0 = ref.paged_gather_ref(pool, jnp.full((B, nb), -1, jnp.int32))
+    assert float(jnp.abs(got0).max()) == 0.0
+
+
+def test_append_kv_paged_matches_ref():
+    q, kp, vp, kn, vn, tbl, cl = _pool_case(jax.random.PRNGKey(1))
+    pos = jnp.asarray([16, 8, 31], jnp.int32)
+    got = lm.append_kv_paged(kp, kn, pos, tbl)
+    want = ref.paged_append_ref(kp, kn, pos, tbl)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+    # a freed slot (all-unassigned row) must not write to the pool
+    tbl2 = tbl.at[1].set(-1)
+    got2 = lm.append_kv_paged(kp, kn, jnp.asarray([16, 0, 31]), tbl2)
+    want2 = ref.paged_append_ref(kp, kn, jnp.asarray([16, 0, 31]), tbl2)
+    assert np.array_equal(np.asarray(got2, np.float32),
+                          np.asarray(want2, np.float32))
+    assert np.array_equal(np.asarray(got2[tbl[1, 0]]), np.asarray(kp[tbl[1, 0]]))
+
+
+@pytest.mark.parametrize("window", [0, 6])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_paged_decode_attention_kernel_vs_oracle(window, dtype):
+    """The scalar-prefetch Pallas kernel (interpret mode) streams blocks
+    via the table and matches the gather oracle exactly."""
+    q, kp, vp, *_ , tbl, cl = _pool_case(jax.random.PRNGKey(2), dtype=dtype)
+    got = paged_decode_attention(q, kp, vp, tbl, cache_len=cl,
+                                 window=window, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, tbl, cache_len=cl,
+                                          window=window)
+    err = np.abs(np.asarray(got, np.float32)
+                 - np.asarray(want, np.float32)).max()
+    assert err < (2e-2 if dtype == jnp.bfloat16 else 1e-5), (window, err)
+
+
+def test_paged_decode_attention_xla_gather_vs_oracle():
+    q, kp, vp, *_, tbl, cl = _pool_case(jax.random.PRNGKey(3))
+    got = attention_decode_paged(q[:, None], kp, vp, tbl, cache_len=cl)
+    want = ref.paged_decode_attention_ref(q, kp, vp, tbl, cache_len=cl)
+    err = np.abs(np.asarray(got[:, 0], np.float32)
+                 - np.asarray(want, np.float32)).max()
+    assert err < 2e-2, err
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_flash_decode_paged_single_shard_vs_oracle(window):
+    from repro.launch.mesh import make_host_mesh
+    from repro.dist.flash_decode import flash_decode_paged
+    mesh = make_host_mesh()
+    q, kp, vp, kn, vn, tbl, cl = _pool_case(jax.random.PRNGKey(4),
+                                            dtype=jnp.float32)
+    pos = jnp.asarray([16, 8, 30], jnp.int32)
+    ctx, kp2, vp2 = jax.jit(
+        lambda *a: flash_decode_paged(*a, mesh=mesh))(
+            q[:, None], kn, vn, kp, vp, tbl, pos, window)
+    kr = ref.paged_append_ref(kp, kn, pos, tbl)
+    vr = ref.paged_append_ref(vp, vn, pos, tbl)
+    r = ref.paged_decode_attention_ref(q, kr, vr, tbl, cache_len=pos + 1,
+                                       window=window)
+    assert float(jnp.abs(ctx[:, 0] - r).max()) < 1e-5
+    assert np.allclose(np.asarray(kp2), np.asarray(kr))
+    assert np.allclose(np.asarray(vp2), np.asarray(vr))
+
+
+def test_decode_step_paged_matches_dense_cache():
+    """One lm.decode_step over a paged cache == the same step over the
+    equivalent dense cache (same staggered fill), logits and appended
+    rows both."""
+    from repro.configs import get_arch
+    from repro.models.lm import RunCfg
+    cfg = RunCfg(block_q=16, ssd_chunk=16)
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(5))
+    B, max_len, bl = 2, 32, 16
+    plens = [5, 11]
+    dense = lm.init_cache(arch, B, max_len)
+    paged = lm.init_paged_cache(arch, B, max_len, bl, 2 * (max_len // bl))
+    toks = []
+    for slot, plen in enumerate(plens):
+        p = (np.arange(plen, dtype=np.int32) * 3 + slot) % arch.vocab_size
+        lg, c1 = lm.prefill(arch, params,
+                            {"tokens": jnp.asarray(p[None], jnp.int32)},
+                            cfg, max_len=max_len)
+        for key in ("k", "v"):
+            dense[key] = dense[key].at[:, slot].set(c1[key][:, 0])
+        toks.append(int(jnp.argmax(lg[0, :arch.vocab_size])))
+    # paged layout: slot 0 owns blocks [0, 1], slot 1 owns [2, 3]
+    nb = max_len // bl
+    tbl = np.asarray([[0, 1], [2, 3]], np.int32)
+    for key in ("k", "v"):
+        pool = dense[key].reshape(dense[key].shape[0], B * nb, bl,
+                                  *dense[key].shape[3:])
+        paged[key] = pool
+    paged["block_tbl"] = jnp.asarray(tbl)
+    pos = jnp.asarray(plens, jnp.int32)
+    dense["pos"] = pos
+    paged["pos"] = pos
+    t = jnp.asarray(toks, jnp.int32)[:, None]
+    lg_d, dense2 = lm.decode_step(arch, params, dense, {"tokens": t}, cfg)
+    lg_p, paged2 = lm.decode_step(arch, params, paged, {"tokens": t}, cfg)
+    err = np.abs(np.asarray(lg_d, np.float32)
+                 - np.asarray(lg_p, np.float32)).max()
+    assert err < 1e-3, err
+    # the appended pool rows match the dense appended rows
+    for key in ("k", "v"):
+        dview = dense2[key].reshape(dense2[key].shape[0], B * nb, bl,
+                                    *dense2[key].shape[3:])
+        assert np.allclose(np.asarray(paged2[key], np.float32),
+                           np.asarray(dview, np.float32))
+
+
+# ---------------- the plan decision ----------------
+
+def test_kv_residency_plan_decision():
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    # model-only mesh (data degree 1): the pool replicates nowhere ->
+    # paged is the decision
+    plan = specialize("qwen2-vl-72b", "decode_32k", mesh_shape=(1, 16))
+    assert plan.estimates["kv_residency"] == "paged"
+    assert plan.estimates["kv_block_len"] >= 16
+    assert plan.estimates["kv_n_blocks"] >= 1
+    assert plan.estimates["kv_n_blocks"] % 16 == 0      # model-shardable
+    assert plan.estimates["kv_paged_bytes"] <= plan.estimates["kv_dense_bytes"]
+    assert any(s == "kv_residency" for _, s, _, _ in plan.log)
+
+    # a >1 data degree would REPLICATE the pool (no batch dim): the
+    # decision honestly stays dense until 2-D pool sharding exists
+    dp = specialize("qwen2-vl-72b", "decode_32k")       # 16x16 mesh
+    assert dp.estimates["kv_residency"] == "dense"
+    assert any(s == "kv_residency" and "replicate" in why
+               for _, s, _, why in dp.log)
+
+    # too shallow for >=2 blocks/seq -> dense
+    shallow = specialize("qwen3-8b",
+                         ShapeConfig("decode_shallow", "decode", 16, 2),
+                         mesh_shape=(1, 1))
+    assert shallow.estimates["kv_residency"] == "dense"
+    assert "kv_block_len" not in shallow.estimates
+
+    # option override forces either way (and is part of the request key)
+    forced = specialize("qwen2-vl-72b", "decode_32k", mesh_shape=(1, 16),
+                        kv_residency="dense")
+    assert forced.estimates["kv_residency"] == "dense"
+
+    # training shapes and SSM-only archs never page
+    train = specialize("qwen3-8b", "train_4k")
+    assert "kv_residency" not in train.estimates
+    ssm = specialize("mamba2-2.7b", "long_500k")
+    assert "kv_residency" not in ssm.estimates
+
+
+def test_costmodel_kv_block_geometry():
+    from repro.core.costmodel import kv_block_geometry
+    geo = kv_block_geometry(32768, 128, 80, 8, 128)
+    assert geo.block_len == 512
+    assert geo.blocks_per_seq == 64
+    assert geo.n_blocks == 128 * 64           # uncapped: dense worst case
+    assert geo.paged_bytes == geo.dense_bytes
+    # a budget cap shrinks the pool but never below one full sequence
+    capped = kv_block_geometry(32768, 128, 80, 8, 128,
+                               budget_bytes=geo.dense_bytes / 4)
+    assert geo.n_blocks / 4.1 < capped.n_blocks <= geo.n_blocks // 4
+    tiny = kv_block_geometry(32768, 128, 80, 8, 128, budget_bytes=1.0)
+    assert tiny.n_blocks == tiny.blocks_per_seq
+    # zero headroom is a real cap (the one-sequence floor), NOT uncapped
+    zero = kv_block_geometry(32768, 128, 80, 8, 128, budget_bytes=0.0)
+    assert zero.n_blocks == zero.blocks_per_seq
+    # data replication divides capacity; model alignment keeps the pool
+    # shardable (never below an aligned one-sequence floor)
+    dp = kv_block_geometry(32768, 128, 80, 8, 128, data_shards=16, align=16)
+    assert dp.n_blocks == 128 * 64 // 16 and dp.n_blocks % 16 == 0
+    odd = kv_block_geometry(64, 3, 2, 2, 16, align=8)     # want=12 -> 8
+    assert odd.n_blocks == 8
+    floor = kv_block_geometry(64, 1, 2, 2, 16, align=8)   # per_seq=4 -> 8
+    assert floor.n_blocks == 8
+
+
+# ---------------- the `repro plan` CLI ----------------
+
+def test_plan_cli_list_show_diff(capsys, tmp_path):
+    from repro.core.pipeline import specialize
+    from repro.launch.plan import main
+    d = str(tmp_path / "plans")
+    a = specialize("qwen3-8b", "train_4k", plan_dir=d)
+    b = specialize("qwen3-8b", "train_4k", plan_dir=d, decode_impl="xla")
+
+    assert main(["--plan-dir", d, "list"]) == 0
+    out = capsys.readouterr().out
+    assert a.content_hash()[:12] in out and "qwen3-8b" in out
+
+    assert main(["--plan-dir", d, "show", a.content_hash()[:10],
+                 "--log"]) == 0
+    out = capsys.readouterr().out
+    assert a.content_hash() in out
+    assert "train seq=4096 batch=256" in out
+    assert "[data_organization]" in out
+
+    rc = main(["--plan-dir", d, "diff", a.content_hash()[:10],
+               b.content_hash()[:10]])
+    out = capsys.readouterr().out
+    if a.content_hash() != b.content_hash():
+        assert rc == 1
+    else:
+        assert rc == 0 and "identical" in out
+
+    assert main(["--plan-dir", d, "diff", a.content_hash()[:10],
+                 a.content_hash()[:10]]) == 0
+    assert "identical" in capsys.readouterr().out
+
+    with pytest.raises(SystemExit, match="no stored plan"):
+        main(["--plan-dir", d, "show", "ffffffffffff"])

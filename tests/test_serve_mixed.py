@@ -247,6 +247,200 @@ def test_request_satisfied_by_prefill_finishes_without_decode():
     assert not eng.active and sorted(eng.free_slots) == [0, 1]
 
 
+# ---------------- paged KV residency ----------------
+
+PAGED = dict(kv_residency="paged", kv_block_len=16)
+
+
+def _run_engine(arch, params, cfg, prompts, new_tokens, max_batch=2,
+                max_len=32, **kw):
+    eng = ServeEngine(arch, params, cfg, max_batch=max_batch,
+                      max_len=max_len, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=new_tokens)
+    done = eng.run_until_idle(max_ticks=128)
+    assert len(done) == len(prompts)
+    return {r.prompt.tobytes(): r.out_tokens for r in done}, eng
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"])
+def test_paged_decode_token_identical_to_dense(name):
+    """Block-pool residency must be invisible to the tokens: the same
+    staggered mix through a paged engine == dense engine, across
+    attention/SSM/hybrid archs — and every block returns to the pool."""
+    arch = get_arch(name).reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch)
+    dense, _ = _run_engine(arch, params, CFG, prompts, 6)
+    paged, eng = _run_engine(arch, params, CFG, prompts, 6, **PAGED)
+    for p in prompts:
+        assert paged[p.tobytes()] == dense[p.tobytes()], (name, p.shape)
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"], "blocks leaked"
+    if arch.has_attention:
+        assert eng.kv_residency == "paged" and stats["total"] > 0
+    else:
+        assert eng.kv_residency == "dense"   # nothing to page for SSM
+
+
+def test_paged_decode_token_identical_flash_decode():
+    """Same contract through the flash-decode paged combine (single-
+    shard path on the host mesh; the pool-sharded shard_map run lives in
+    test_multidevice)."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    cfg = dataclasses.replace(CFG, decode_impl="shard_map_flash", mesh=mesh)
+    prompts = _prompts(arch)
+    dense, _ = _run_engine(arch, params, cfg, prompts, 5)
+    paged, eng = _run_engine(arch, params, cfg, prompts, 5, **PAGED)
+    assert eng.decode_path == "flash"
+    for p in prompts:
+        assert paged[p.tobytes()] == dense[p.tobytes()]
+    assert eng.block_stats()["free"] == eng.block_stats()["total"]
+
+
+def test_bucketed_prefill_admits_batch_in_one_call():
+    """Same-length pending prompts are admitted through ONE jitted
+    prefill call per bucket — and stay token-identical to sequential."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    bucket_a = [rng.integers(0, arch.vocab_size, (7,)).astype(np.int32)
+                for _ in range(4)]
+    bucket_b = [rng.integers(0, arch.vocab_size, (11,)).astype(np.int32)
+                for _ in range(2)]
+    prompts = bucket_a + bucket_b
+    want = _serve_sequential(arch, params, CFG, prompts, 4, 32)
+
+    got, eng = _run_engine(arch, params, CFG, prompts, 4, max_batch=8,
+                           **PAGED)
+    assert eng.prefill_calls == 2, eng.prefill_batches
+    assert sorted(eng.prefill_batches) == [2, 4]
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w
+
+
+def test_pool_exhaustion_serializes_and_recycles():
+    """A pool of 2 blocks with 2-block requests: admissions serialize on
+    block availability (head-of-line waits for a finisher), outputs stay
+    token-identical to a fresh engine, and nothing leaks."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch)
+    want = _serve_sequential(arch, params, CFG, prompts, 5, 32)
+
+    # block_len=8: every prompt (5/11/8 tokens) + 5 new needs exactly 2
+    # blocks, and the pool holds exactly one request's worth
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=2)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    peak = 0
+    ticks = 0
+    while (eng.pending or eng.active) and ticks < 256:
+        eng.step()
+        stats = eng.block_stats()
+        assert 0 <= stats["free"] <= stats["total"]
+        peak = max(peak, stats["in_use"])
+        assert len(eng.active) <= 1, "pool of 2 cannot host two requests"
+        ticks += 1
+    got = {r.prompt.tobytes(): r.out_tokens for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w
+    assert peak == 2
+    assert eng.block_stats()["free"] == 2, "blocks leaked"
+    # a request no amount of churn could ever admit is a loud error,
+    # not an admission queue that waits forever
+    with pytest.raises(ValueError, match="blocks"):
+        eng.submit(prompts[0], max_new_tokens=20)
+    # ...but a prefill-satisfied request (max_new=1) allocates NOTHING,
+    # so even a long prompt sails past an undersized pool
+    eng.submit(np.arange(24, dtype=np.int32) % arch.vocab_size,
+               max_new_tokens=1)
+    done = eng.run_until_idle(max_ticks=8)
+    assert len(done[-1].out_tokens) == 1
+    assert eng.block_stats()["free"] == 2
+
+
+def test_block_recycling_churn_at_full_occupancy():
+    """admit -> finish -> re-admit churn at full pool occupancy: the
+    second wave reuses reclaimed blocks and is token-identical to a
+    fresh engine serving the same wave."""
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    prompts = _prompts(arch)
+
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32, **PAGED)
+    total = eng.block_stats()["total"]
+    for wave in range(2):
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6)
+        eng.run_until_idle(max_ticks=128)
+        assert eng.block_stats()["free"] == total, f"leak after wave {wave}"
+    fresh, _ = _run_engine(arch, params, CFG, prompts, 6, **PAGED)
+    wave2 = {r.prompt.tobytes(): r.out_tokens
+             for r in eng.finished[len(prompts):]}
+    for p in prompts:
+        assert wave2[p.tobytes()] == fresh[p.tobytes()], \
+            "recycled blocks changed tokens"
+
+
+# ---------------- from_plan workload-dims validation ----------------
+
+def test_from_plan_rejects_incompatible_workload_dims():
+    """Overrides larger than the dims the plan sized the cache for (and
+    non-decode plans without explicit dims) are loud errors, not silent
+    stale-dim cache sizing."""
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    arch = get_arch("qwen3-8b").reduced()
+    shape = ShapeConfig("serve_val", "decode", 32, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+    with pytest.raises(ValueError, match="seq_len"):
+        ServeEngine.from_plan(plan, params, arch=arch, max_len=64)
+    with pytest.raises(ValueError, match="global_batch"):
+        ServeEngine.from_plan(plan, params, arch=arch, max_batch=4)
+    # smaller-than-plan overrides remain a supported deployment shrink
+    eng = ServeEngine.from_plan(plan, params, arch=arch, max_batch=1)
+    assert eng.max_batch == 1
+
+    tplan = specialize(arch, ShapeConfig("train_val", "train", 32, 2),
+                       mesh_axes=("data", "model"), mesh_shape=(1, 1))
+    tparams = lm.init_params(arch, jax.random.PRNGKey(0),
+                             *tplan.padded_sizes())
+    with pytest.raises(ValueError, match="shape_kind"):
+        ServeEngine.from_plan(tplan, tparams, arch=arch)
+    eng = ServeEngine.from_plan(tplan, tparams, arch=arch,
+                                max_batch=2, max_len=32)
+    assert eng.max_len == 32
+
+
+def test_from_plan_paged_engine_serves_plan_decision():
+    """A decode plan that chose paged residency drives a paged engine
+    end-to-end (pool sized from the artifact, blocks reclaimed)."""
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    arch = get_arch("qwen3-8b").reduced()
+    shape = ShapeConfig("serve_paged", "decode", 32, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    assert plan.estimates.get("kv_residency") == "paged"
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+    eng = ServeEngine.from_plan(plan, params, arch=arch)
+    assert eng.kv_residency == "paged"
+    assert eng.block_len == int(plan.estimates["kv_block_len"])
+    for p in _prompts(arch):
+        eng.submit(p, max_new_tokens=4)
+    done = eng.run_until_idle(max_ticks=64)
+    assert len(done) == 3
+    assert eng.block_stats()["free"] == eng.block_stats()["total"]
+
+
 # ---------------- plumbing the per-slot pos through sharding ----------
 
 def test_cache_pspecs_pos_follows_batch_rule():
