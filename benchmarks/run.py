@@ -186,6 +186,7 @@ def table2_kernels() -> None:
 
     _decode_step_rows(ks, H, K, D)
     _paged_occupancy_rows(ks, H, K, D)
+    _paged_2d_occupancy_rows(H, K, D)
 
     plan2 = specialize("mamba2-2.7b", "train_4k")
     bp2 = plan2.partitions["ssd_scan"]
@@ -346,6 +347,87 @@ def _paged_occupancy_rows(ks, H, K, D) -> None:
              _time(paged_fn, q1, kn, vn, pool_k, pool_v, tbl, pos),
              fill + f";pinned_MiB={paged_mib:.0f};"
              f"block_len={bl};blocks={used}/{B * nb}")
+
+
+def _paged_2d_occupancy_rows(H, K, D) -> None:
+    """The 2-D pool-sharded paged combine at 25/50/100% occupancy on a
+    real 2x4 data×model mesh (subprocess with forced host devices, like
+    the shard_map dense row): block dim data-major over both axes,
+    batch partitioned across data, per-slot sub-pool block tables —
+    next to the dense-stripe baseline the table already carries."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    B, S = 8, 4096
+    code = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np, time
+        from repro.core.costmodel import kv_block_len
+        from repro.dist.flash_decode import (flash_decode_paged,
+                                             pool_sharding_kind)
+        B, S, H, K, D = {B}, {S}, {H}, {K}, {D}
+        dsize, msize = 2, 4
+        bl = kv_block_len(S)
+        nbs = S // bl                       # blocks per sequence
+        N = B * nbs                         # full worst-case pool
+        mesh = jax.make_mesh((dsize, msize), ("data", "model"))
+        assert pool_sharding_kind(mesh, N, B) == "2d"
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+        kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+        vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+        kp = jax.random.normal(ks[3], (N, bl, K, D)).astype(jnp.bfloat16)
+        vp = jax.random.normal(ks[4], (N, bl, K, D)).astype(jnp.bfloat16)
+        fn = jax.jit(lambda *a: flash_decode_paged(*a, mesh=mesh))
+        row_bytes = 2 * K * D * 2           # k+v rows, bf16
+        sub = N // dsize
+        for occ in (25, 50, 100):
+            n_live = max(1, B * occ // 100)
+            pos_np = np.zeros((B,), np.int32)
+            pos_np[:n_live] = np.linspace(64, S - 1, n_live) \\
+                .astype(np.int32)
+            tbl_np = np.full((B, nbs), -1, np.int32)
+            used_in = [0] * dsize           # per-sub-pool cursor
+            used = 0
+            for b in range(n_live):
+                g = b * dsize // B          # the slot's data shard
+                need = int(np.ceil((pos_np[b] + 1) / bl))
+                first = g * sub + used_in[g]
+                tbl_np[b, :need] = np.arange(first, first + need)
+                used_in[g] += need
+                used += need
+            tbl = jnp.asarray(tbl_np)
+            pos = jnp.asarray(pos_np)
+            for _ in range(2):
+                jax.block_until_ready(fn(q, kn, vn, kp, vp, tbl, pos, 0))
+            ts = []
+            for _ in range(10):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(q, kn, vn, kp, vp, tbl, pos, 0))
+                ts.append(time.perf_counter() - t0)
+            mib = used * bl * row_bytes / 2**20
+            print("ROW=decode_step/paged_2d/occ%d,%.1f,occ=%d%%;live=%d/%d;"
+                  "pinned_MiB=%.0f;block_len=%d;blocks=%d/%d;"
+                  "pool=2x4 data-major sub-pools, batch partitioned"
+                  % (occ, float(np.median(ts)) * 1e6, occ, n_live, B,
+                     mib, bl, used, N))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": str(
+            Path(__file__).resolve().parents[1] / "src"),
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    rows = [l[4:] for l in out.stdout.splitlines() if l.startswith("ROW=")]
+    if out.returncode == 0 and rows:
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            emit(name, float(us), derived)
+    else:
+        emit("decode_step/paged_2d/occ25", 0.0,
+             "subprocess failed: " + out.stderr.strip()[-200:])
 
 
 # ---------------------------------------------------------------------

@@ -7,11 +7,23 @@
 #
 #   scripts/ci.sh            # full tier-1 + table1 smoke
 #   scripts/ci.sh --fast     # tier-1 only
+#   scripts/ci.sh --dist     # multi-device lane: test_multidevice on 8
+#                            # forced host devices (shard_map seq-sharded
+#                            # + 2-D pool-sharded paths run for real, not
+#                            # only when a developer remembers the flag)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--dist" ]]; then
+    echo "== dist lane: test_multidevice under 8 forced host devices =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python -m pytest -x -q tests/test_multidevice.py
+    echo "CI OK (dist)"
+    exit 0
+fi
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q

@@ -221,13 +221,22 @@ class KVBlockGeometry:
 
     block_len: int                 # cache rows per block
     blocks_per_seq: int            # ceil(seq_len / block_len)
-    n_blocks: int                  # pool capacity
+    n_blocks: int                  # pool capacity (global, all sub-pools)
     dense_bytes: int               # B x seq_len stripe footprint (k+v, all layers)
     paged_bytes: int               # pool footprint at this capacity
+    data_degree: int = 1           # sub-pools the block dim splits into
+    model_degree: int = 1          # model shards per sub-pool
 
     @property
     def table_cols(self) -> int:
         return self.blocks_per_seq
+
+    @property
+    def sub_pool_blocks(self) -> int:
+        """Blocks each data shard's sub-pool owns (2-D pool sharding:
+        the block dim is split data-major into ``data_degree`` sub-pools,
+        each serving the batch slots that data shard hosts)."""
+        return self.n_blocks // max(1, self.data_degree)
 
 
 def kv_block_len(seq_len: int, min_block: int = 16,
@@ -258,34 +267,40 @@ def kv_block_geometry(
 ) -> KVBlockGeometry:
     """Choose the paged-pool geometry for a decode workload.
 
-    The pool has no batch dim (blocks are dynamically assigned to
-    slots), so unlike the dense cache it cannot shard over the data
-    axis — it *replicates* there.  ``data_shards`` therefore divides
-    the worst-case capacity: per-device the pool then never exceeds the
-    dense stripes it replaces (paged oversubscribes by the data degree,
-    which is the reclamation bet — churn keeps the pool fed).  A
-    ``budget_bytes`` cap (the HBM left for the cache on one data
-    replica) shrinks it further — never below one full sequence, the
-    minimum the engine needs to make progress.  ``align`` (the model
-    axis size) rounds the capacity to a shardable multiple: a
-    non-divisible pool would silently *replicate* per model shard
-    instead, blowing the very budget this sizing validated.
+    2-D pool sharding: the block dim is split data-major into
+    ``data_shards`` sub-pools (one per data shard, serving the batch
+    slots that shard hosts) and each sub-pool shards over the ``align``
+    model-axis degree — so unlike the pre-2-D pool the capacity
+    *shards* over the data axis instead of replicating there.
+    ``data_shards`` still divides the worst-case capacity: the pool
+    covers ``1/data_shards`` of the all-slots-at-max footprint, which
+    is the reclamation bet — churn keeps the sub-pools fed — and what
+    puts per-chip paged bytes *below* the dense stripes it replaces.
+    A ``budget_bytes`` cap (the *global* HBM left for the cache across
+    every chip the pool spans) shrinks it further — never below one
+    full sequence per sub-pool, the minimum each data shard's slots
+    need to make progress.  Every sub-pool is rounded to an ``align``
+    multiple: a non-divisible sub-pool would silently *replicate* per
+    model shard instead, blowing the very budget this sizing validated.
     """
     bl = kv_block_len(seq_len)
     per_seq = -(-seq_len // bl)
     want = max(1, batch) * per_seq
     block_bytes = 2 * n_layers * bl * kv_heads * head_dim * dtype_bytes
-    n = max(per_seq, want // max(1, data_shards))
+    d = max(1, data_shards)
+    n = max(per_seq, want // d)
     if budget_bytes is not None and block_bytes > 0:
         cap = int(budget_bytes // block_bytes)
         n = max(per_seq, min(n, cap))
+    # per-sub-pool floor + alignment: each data shard owns n/d blocks,
+    # shardable by the model axis and >= one full sequence (rounding the
+    # floor UP when needed — slightly over budget beats a pool that
+    # silently replicates per model shard)
+    sub = n // d
     if align > 1:
-        # round down to a shardable multiple; if the one-sequence floor
-        # forces past it, round the floor UP instead (slightly over
-        # budget beats an msize-times replicated pool)
-        n = align * (n // align)
-        if n < per_seq:
-            n = align * (-(-per_seq // align))
+        sub = align * (sub // align)
+    sub = max(sub, align * (-(-per_seq // align)) if align > 1 else per_seq)
+    n = d * sub
     return KVBlockGeometry(
         block_len=bl,
         blocks_per_seq=per_seq,
@@ -293,6 +308,8 @@ def kv_block_geometry(
         dense_bytes=2 * n_layers * max(1, batch) * seq_len
         * kv_heads * head_dim * dtype_bytes,
         paged_bytes=n * block_bytes,
+        data_degree=d,
+        model_degree=max(1, align),
     )
 
 

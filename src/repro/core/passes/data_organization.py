@@ -182,44 +182,50 @@ class DataOrganizationPass(Pass):
 
         The serving KV cache is the one memory whose *occupancy* varies
         at runtime (slots churn); paging turns freed slots back into pool
-        capacity instead of dead masked rows.  The pass decides the
-        geometry (block_len, n_blocks) from the workload dims and the
-        HBM left after persistent state.  Dense wins when the cache is
-        too shallow for blocks to matter, or when the mesh has a >1 data
-        degree: the pool has no batch dim, so it *replicates* there —
-        every data shard would gather and score the full batch's views,
-        regressing the step's working set and compute (2-D pool sharding
-        is the ROADMAP item that lifts this).  An
+        capacity instead of dead masked rows.  The pass decides the 2-D
+        geometry (block_len, n_blocks split data-major into per-data-
+        shard sub-pools, each model-shardable) from the workload dims
+        and the HBM left after persistent state: on a data×model mesh
+        the pool shards over BOTH axes — batch slots partition across
+        data and each (data, model) shard owns its block slice, the
+        partitioned-multi-bank specialization of the template.  Dense
+        wins when the cache is too shallow for blocks to matter, or when
+        the batch cannot partition over the data degree (slots could not
+        be owned per data shard, which would force the pool back to
+        data-replication and regress per-chip compute).  An
         ``options['kv_residency']`` override forces either.
         """
         plan, arch, shape = ctx.plan, ctx.arch, ctx.shape
         if shape.kind != "decode" or not arch.has_attention:
             return
-        # the pool shards only over the model axis and REPLICATES over
-        # the data axis (no batch dim): its budget is one data replica's
-        # HBM headroom, and its capacity is divided by the data degree
-        # so per-device paged never exceeds the dense stripes it
-        # replaces.  (zero headroom is a real cap — it clamps the pool
-        # to the one-sequence floor, not to the uncapped worst case.)
+        # the pool spans every chip (data-major sub-pools × model
+        # shards), so its budget is the GLOBAL HBM headroom; capacity
+        # still targets 1/data_degree of the all-slots-at-max footprint
+        # (the reclamation bet — churn keeps the sub-pools fed), which
+        # is what puts per-chip paged bytes below the dense stripes.
+        # (zero headroom is a real cap — it clamps each sub-pool to the
+        # one-sequence floor, not to the uncapped worst case.)
         msize = ctx.mesh.axis_size("model") if "model" in ctx.mesh.axes else 1
         dsize = max(1, ctx.mesh.n_devices // msize)
-        left = max(budget - persistent, 0.0) * msize
+        left = max(budget - persistent, 0.0) * msize * dsize
         geo = kv_block_geometry(
             shape.seq_len, shape.global_batch, arch.n_layers,
             arch.n_kv_heads, arch.hd, budget_bytes=left,
             data_shards=dsize, align=msize)
+        batch_ok = dsize == 1 or shape.global_batch % dsize == 0
         forced = ctx.options.get("kv_residency")
-        paged = (geo.blocks_per_seq >= 2 and dsize == 1) if forced is None \
+        paged = (geo.blocks_per_seq >= 2 and batch_ok) if forced is None \
             else forced == "paged"
         plan.estimates["kv_residency"] = "paged" if paged else "dense"
         if not paged:
             if forced is not None:
                 why = "forced by options"
-            elif dsize > 1:
-                why = (f"pool would replicate over the {dsize}-wide data "
-                       "degree (no batch dim to shard): per-chip decode "
-                       "working set and compute regress vs dense stripes "
-                       "— needs 2-D pool sharding")
+            elif not batch_ok:
+                why = (f"batch {shape.global_batch} does not partition "
+                       f"over the {dsize}-wide data degree — slots could "
+                       "not be owned per data shard, so the pool would "
+                       "fall back to data-replication (per-chip working "
+                       "set and compute regress vs dense stripes)")
             else:
                 why = (f"cache depth {shape.seq_len} yields "
                        f"{geo.blocks_per_seq} block(s)/seq at "
@@ -231,16 +237,22 @@ class DataOrganizationPass(Pass):
         plan.estimates["kv_n_blocks"] = geo.n_blocks
         plan.estimates["kv_dense_bytes"] = float(geo.dense_bytes)
         plan.estimates["kv_paged_bytes"] = float(geo.paged_bytes)
+        plan.estimates["kv_pool_data_degree"] = geo.data_degree
+        plan.estimates["kv_pool_model_degree"] = geo.model_degree
         for t in ctx.ir.by_role(Role.KV_CACHE):
             plan.placement(t.name).layout["kv_residency"] = "paged"
             plan.placement(t.name).decided_by.append(self.name + ":paged")
+        n_chips = dsize * msize
         self.record(
             ctx, "kv_residency",
-            f"paged block_len={geo.block_len} n_blocks={geo.n_blocks}",
-            f"pool {geo.paged_bytes/msize/2**30:.2f} GiB/chip (model-"
-            f"sharded, data-replicated) vs dense stripes "
-            f"{geo.dense_bytes/(dsize*msize)/2**30:.2f} GiB/chip; freed "
-            "slots return blocks to the pool instead of masking rows")
+            f"paged block_len={geo.block_len} n_blocks={geo.n_blocks} "
+            f"pool_sharding={dsize}x{msize}",
+            f"pool {geo.paged_bytes/n_chips/2**30:.2f} GiB/chip (2-D "
+            f"sharded: {dsize} data-major sub-pools of "
+            f"{geo.sub_pool_blocks} blocks x model degree {msize}, batch "
+            f"partitioned across data) vs dense stripes "
+            f"{geo.dense_bytes/n_chips/2**30:.2f} GiB/chip; freed slots "
+            "return blocks to their sub-pool instead of masking rows")
 
     # ------------------------------------------------------------------
     def _pick_strategy(self, ctx: PassContext) -> str:

@@ -107,7 +107,12 @@ def init_plan_cache(plan: MemoryPlan, arch: ArchConfig, batch: int,
     """Materialize the session cache the plan's residency decision asks
     for: a block pool (+ block table) for ``kv_residency == "paged"``,
     dense per-slot stripes otherwise.  The shape every consumer of
-    ``lower_serve_step`` must feed it."""
+    ``lower_serve_step`` must feed it.  ``kv_n_blocks`` is the GLOBAL
+    pool capacity: on a data×model mesh the pass sized it as
+    ``kv_pool_data_degree`` data-major sub-pools, each divisible by the
+    model degree, so ``cache_pspecs`` lands the block dim 2-D-sharded
+    and the serve step's paged combine partitions the batch instead of
+    replicating it."""
     if str(plan.estimates.get("kv_residency", "dense")) == "paged":
         return lm.init_paged_cache(
             arch, batch, seq_len,

@@ -315,23 +315,56 @@ class PlanStore:
                 pass
         return plan
 
+    def _check_entry(self, path: Path, expect_hash: Optional[str] = None):
+        """``(status, entry, hash)`` for one on-disk entry — THE entry
+        verification recipe (``_read_entry`` loads through it and the
+        ``plan verify`` CLI reports through it, so the two can never
+        diverge).  ``status``: ``"ok"`` | ``"stale-schema"`` |
+        ``"corrupt"`` | ``"missing"`` (unreadable file).  The hash is
+        computed over the parsed payload directly: the stored dict IS
+        the canonical ``to_dict()`` form (freeze/from_dict are
+        lossless), so this equals ``FrozenPlan.content_hash()`` at half
+        the cost."""
+        try:
+            entry = json.loads(path.read_text())
+        except OSError:
+            return "missing", None, None
+        except ValueError:
+            return "corrupt", None, None
+        if not isinstance(entry, dict) or "plan" not in entry:
+            return "corrupt", entry, None
+        if entry.get("schema") != PLAN_SCHEMA_VERSION:
+            return "stale-schema", entry, None
+        try:
+            h = hashlib.sha256(
+                canonical_json(entry["plan"]).encode()).hexdigest()
+        except Exception:
+            return "corrupt", entry, None
+        if entry.get("content_hash") != h or \
+                (expect_hash is not None and h != expect_hash):
+            return "corrupt", entry, h
+        return "ok", entry, h
+
+    def verify_entry(self, path: Path) -> str:
+        """One entry's health for inspection tools: ``"ok"`` |
+        ``"stale-schema"`` | ``"corrupt"`` (an entry whose filename
+        does not match its content hash, or an unreadable file, is
+        corrupt — it can never be loaded under its own name)."""
+        status, _, h = self._check_entry(path)
+        if status == "missing" or (status == "ok" and h != path.stem):
+            return "corrupt"
+        return status
+
     def _read_entry(self, path: Path,
                     expect_hash: Optional[str] = None) -> Optional[FrozenPlan]:
         """Parse + verify one on-disk entry; any defect -> miss."""
+        status, entry, h = self._check_entry(path, expect_hash)
+        if status == "missing":
+            return None
+        if status != "ok":
+            self._stats["corrupt"] += 1
+            return None
         try:
-            entry = json.loads(path.read_text())
-            if entry.get("schema") != PLAN_SCHEMA_VERSION:
-                self._stats["corrupt"] += 1
-                return None
-            # hash the parsed payload directly: the stored dict IS the
-            # canonical to_dict() form (freeze/from_dict are lossless),
-            # so this equals FrozenPlan.content_hash() at half the cost
-            h = hashlib.sha256(
-                canonical_json(entry["plan"]).encode()).hexdigest()
-            if entry.get("content_hash") != h or \
-                    (expect_hash is not None and h != expect_hash):
-                self._stats["corrupt"] += 1
-                return None
             plan = MemoryPlan.from_dict(entry["plan"]).freeze()
             object.__setattr__(plan, "_content_hash", h)
             try:
@@ -339,10 +372,8 @@ class PlanStore:
             except OSError:
                 pass
             return plan
-        except OSError:
-            return None
         except Exception:
-            # truncated JSON, missing fields, stale schema details —
+            # payload fields the current plan schema cannot rebuild —
             # tolerate and recompile rather than crash the caller
             self._stats["corrupt"] += 1
             return None

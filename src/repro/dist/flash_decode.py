@@ -20,9 +20,15 @@ appends and masks each slot at its own offset; ``window`` may be a
 traced scalar.
 
 :func:`flash_decode_paged` is the paged-residency twin: the cache is a
-block pool + per-slot block table, the *pool* dim takes the model axis
+block pool + per-slot block table, the *pool* dim takes the mesh axes
 (there is no contiguous seq dim to shard), and the same 3-term combine
-runs over each shard's owned blocks.
+runs over each shard's owned blocks.  On a data×model mesh the pool is
+sharded over BOTH axes (2-D pool sharding): the block dim splits
+data-major into one sub-pool per data shard, batch slots are
+*partitioned* — not replicated — across data, each (data, model) shard
+appends and attends only the blocks it owns, and the combine psums
+across the model axis alone (a data shard's slots never need another
+data shard's blocks, so no data-axis collective exists in the step).
 """
 
 from __future__ import annotations
@@ -167,12 +173,40 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
 # =====================================================================
 
 def uses_pool_sharding(mesh, n_blocks: int, model_axis: str = "model") -> bool:
-    """Whether :func:`flash_decode_paged` runs the pool-sharded
-    shard_map path (vs its in-process single-shard combine) — the single
-    dispatch predicate ``ServeEngine.decode_path`` shares for paged
-    caches, mirroring :func:`uses_seq_sharding` for dense ones."""
+    """Whether :func:`flash_decode_paged` can run a pool-sharded
+    shard_map path on the model axis alone (the 1-D predicate; see
+    :func:`pool_sharding_kind` for the full data×model dispatch)."""
     msize = mesh_sizes(mesh).get(model_axis, 1)
     return msize > 1 and n_blocks % msize == 0
+
+
+def pool_sharding_kind(mesh, n_blocks: int, batch: int,
+                       data_axes: Tuple[str, ...] = ("data",),
+                       model_axis: str = "model") -> str:
+    """Which pool-sharded path :func:`flash_decode_paged` runs — the
+    single dispatch predicate ``ServeEngine.decode_path`` (and its
+    sub-pool block allocator) shares, mirroring
+    :func:`uses_seq_sharding` for dense caches.
+
+    ``"2d"``  — block dim sharded data-major over (data..., model) and
+    the batch partitioned across data: needs a >1 data degree that
+    divides both the batch (slots must be ownable per data shard) and,
+    jointly with the model degree, the pool.
+    ``"1d"``  — model-axis pool sharding only (the pool replicates over
+    any data axes and the batch stays replicated with it).
+    ``"none"`` — the in-process single-shard combine.
+    """
+    import math
+    sizes = mesh_sizes(mesh)
+    msize = sizes.get(model_axis, 1)
+    dnames = tuple(a for a in data_axes if a in sizes)
+    dsize = math.prod(sizes[a] for a in dnames) if dnames else 1
+    if dsize > 1 and batch % dsize == 0 \
+            and n_blocks and n_blocks % (dsize * msize) == 0:
+        return "2d"
+    if msize > 1 and n_blocks % msize == 0:
+        return "1d"
+    return "none"
 
 
 def _partial_attend_paged(q, kp, vp, tbl, pos, window, start=0):
@@ -226,17 +260,28 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step against a block-pool cache sharded on the *pool*
     dim (a paged cache has no contiguous seq dim to shard — the pool is
-    the unit of placement, so each shard owns ``n_blocks/msize`` blocks
-    and only the owner writes or attends over a block).
+    the unit of placement, so each shard owns its slice of blocks and
+    only the owner writes or attends over a block).
 
     Returns ``(ctx, k_pool', v_pool')`` with ``ctx`` ``(B, 1, H, D)``.
-    Falls back to an unsharded single-shard combine when the model axis
-    cannot shard the pool (size 1 or non-divisible).  ``data_axes`` is
-    accepted for signature parity with :func:`flash_decode` but the
-    batch stays replicated over it — the pool has no batch dim, so
-    batch-sharded appends would diverge the data replicas.  Semantics
-    match :func:`repro.kernels.ref.paged_decode_attention_ref` over the
-    appended pool with ``cache_len = pos + 1``.
+    Dispatch is :func:`pool_sharding_kind`:
+
+    * ``"2d"`` — the block dim shards data-major over ``(data...,
+      model)`` and the batch partitions across data.  Contract: every
+      slot's table entries must point into the sub-pool of the data
+      shard hosting that slot (``ServeEngine``'s allocator guarantees
+      it) — a foreign-sub-pool block is owned by no shard in the slot's
+      data row and is masked out of the combine.  Appends land on the
+      one (data, model) shard owning the block; the softmax combine
+      psums across model only.
+    * ``"1d"`` — model-axis sharding only.  The pool *replicates* over
+      any data axes (no batch dim to shard), so the batch stays
+      replicated with it — batch-sharded appends would make each data
+      replica append only its own slots' rows and silently diverge.
+    * ``"none"`` — the unsharded single-shard combine.
+
+    Semantics match :func:`repro.kernels.ref.paged_decode_attention_ref`
+    over the appended pool with ``cache_len = pos + 1``.
     """
     pos = jnp.asarray(pos, jnp.int32)
     window = jnp.asarray(window, jnp.int32)
@@ -246,34 +291,48 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
 
     from repro.models.lm import append_kv_paged
 
-    if not uses_pool_sharding(mesh, N, model_axis):
+    kind = pool_sharding_kind(mesh, N, B, data_axes, model_axis)
+    if kind == "none":
         kp = append_kv_paged(k_pool, k_new, pos, block_tbl)
         vp = append_kv_paged(v_pool, v_new, pos, block_tbl)
         m, l, acc = _partial_attend_paged(q, kp, vp, block_tbl, pos, window)
         return _finish(q, l, acc), kp, vp
 
-    # unlike the dense cache (whose batch dim shards over the data axis
-    # alongside the appends), the pool has NO batch dim: it is replicated
-    # across data shards, so batch-sharding the appends would make each
-    # data replica append only its own slots' rows and silently diverge.
-    # Every data shard therefore sees the full batch (B is tiny in
-    # decode) and writes an identical pool.
-    bspec = None
+    sizes = mesh_sizes(mesh)
+    msize = sizes.get(model_axis, 1)
+    dnames = tuple(a for a in data_axes if a in sizes)
+    if kind == "2d":
+        bspec = dnames[0] if len(dnames) == 1 else dnames
+        pool_assign = dnames + ((model_axis,) if model_axis in sizes else ())
+    else:
+        bspec = None
+        pool_assign = (model_axis,)
 
     def local_fn(q, kn, vn, kp, vp, tbl, pos, window):
         Nl = kp.shape[0]
-        start = jax.lax.axis_index(model_axis).astype(jnp.int32) * Nl
+        # this shard's first global block id: data-major linearization of
+        # its (data..., model) coordinates, matching the pool dim's
+        # data-major PartitionSpec layout
+        shard = jnp.zeros((), jnp.int32)
+        if kind == "2d":
+            for a in dnames:
+                shard = shard * sizes[a] + jax.lax.axis_index(a)
+        if model_axis in sizes:
+            shard = shard * msize + jax.lax.axis_index(model_axis)
+        start = shard.astype(jnp.int32) * Nl
         kp = append_kv_paged(kp, kn, pos, tbl, start)
         vp = append_kv_paged(vp, vn, pos, tbl, start)
         m, l, acc = _partial_attend_paged(q, kp, vp, tbl, pos, window, start)
-        m_glob = jax.lax.pmax(m, model_axis)
-        coef = jnp.exp(m - m_glob)
-        l_glob = jax.lax.psum(l * coef, model_axis)
-        acc_glob = jax.lax.psum(acc * coef[..., None], model_axis)
-        return _finish(q, l_glob, acc_glob), kp, vp
+        if msize > 1:
+            m_glob = jax.lax.pmax(m, model_axis)
+            coef = jnp.exp(m - m_glob)
+            l = jax.lax.psum(l * coef, model_axis)
+            acc = jax.lax.psum(acc * coef[..., None], model_axis)
+        return _finish(q, l, acc), kp, vp
 
     rep = P(bspec, None, None, None)
-    shd = P(model_axis, None, None, None)
+    shd = P(pool_assign if len(pool_assign) > 1 else pool_assign[0],
+            None, None, None)
     fn = jax.shard_map(local_fn, mesh=mesh,
                        in_specs=(rep, rep, rep, shd, shd,
                                  P(bspec, None), P(bspec), P()),

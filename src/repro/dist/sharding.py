@@ -124,9 +124,25 @@ def cache_pspecs(plan, arch, cache_shapes: Mapping[str, Any],
     :data:`PAGED_CACHE_AXES`: the IR placement's seq-dim spill translates
     to the pool dim (``seq_kv -> kv_blocks`` — the paged analogue the
     :func:`repro.dist.flash_decode.flash_decode_paged` combine serves).
+    When that combine will run its 2-D path (data degree divides both
+    the batch and, jointly with the model degree, the pool —
+    :func:`repro.dist.flash_decode.pool_sharding_kind` is the shared
+    predicate), the pool dim shards data-major over ``(data..., model)``
+    so the placement matches the shard_map's in_specs instead of
+    resharding every tick.
     """
     paged = "block_tbl" in cache_shapes
     axes_map = PAGED_CACHE_AXES if paged else CACHE_AXES
+    pool_2d = None
+    if paged and "k" in cache_shapes:
+        from repro.dist.flash_decode import pool_sharding_kind
+        dnames = tuple(a for a in plan.mesh_axes
+                       if a != "model" and a in sizes)
+        n_blocks = cache_shapes["k"].shape[1]
+        batch = cache_shapes["block_tbl"].shape[0]
+        if pool_sharding_kind(dict(sizes), n_blocks, batch,
+                              data_axes=dnames) == "2d":
+            pool_2d = dnames + (("model",) if "model" in sizes else ())
     out: Dict[str, P] = {}
     for key, sds in cache_shapes.items():
         axes = axes_map.get(key, tuple(None for _ in sds.shape))
@@ -140,5 +156,7 @@ def cache_pspecs(plan, arch, cache_shapes: Mapping[str, Any],
                     ax = "kv_blocks"
                 if ax is not None:
                     rules[ax] = assign
+        if pool_2d is not None and key in ("k", "v"):
+            rules["kv_blocks"] = pool_2d
         out[key] = resolve_pspec(rules, sds.shape, axes, sizes)
     return out

@@ -6,14 +6,20 @@ deployment artifact shelf — this is the shelf's inspection tool::
     python -m repro.launch.plan list [--plan-dir DIR]
     python -m repro.launch.plan show <hash-prefix> [--log]
     python -m repro.launch.plan diff <hash-prefix> <hash-prefix>
+    python -m repro.launch.plan verify
+    python -m repro.launch.plan gc [--max-entries N]
 
 ``list`` tabulates every entry (hash, arch, shape, workload dims, key
 decisions); ``show`` prints one artifact's summary + decision log;
 ``diff`` compares two artifacts decision-by-decision
 (:func:`repro.core.plan.diff_decision_logs`) — the same diff a resumed
-trainer prints on a plan-hash mismatch, available offline.  Hashes may
-be abbreviated to any unique prefix.  Loads are hash-verified by the
-store; corrupt entries are reported, not silently skipped.
+trainer prints on a plan-hash mismatch, available offline.  ``verify``
+re-hashes every stored artifact and reports corrupt / stale-schema
+entries and dangling ``by_key`` refs (exit 1 when any defect is found);
+``gc`` runs the store's eviction manually (stale-schema first, then
+LRU past the cap).  Hashes may be abbreviated to any unique prefix.
+Loads are hash-verified by the store; corrupt entries are reported,
+not silently skipped.
 """
 
 from __future__ import annotations
@@ -118,6 +124,49 @@ def cmd_diff(plan_dir: Path, store: planstore.PlanStore,
     return 1
 
 
+def cmd_verify(plan_dir: Path, store: planstore.PlanStore) -> int:
+    """Re-hash every stored artifact; report anything unservable.
+
+    The health check is :meth:`planstore.PlanStore.verify_entry` — the
+    same recipe ``_read_entry`` loads through, so this report can never
+    diverge from what the store actually accepts."""
+    entries = _entries(plan_dir)
+    bad = 0
+    for f in entries:
+        status = store.verify_entry(f)
+        if status != "ok":
+            bad += 1
+            print(f"{f.stem[:16]:<18} {status}")
+    dangling = 0
+    by_key = plan_dir / "by_key"
+    if by_key.is_dir():
+        for ref in sorted(by_key.iterdir()):
+            try:
+                h = ref.read_text().strip()
+            except OSError:
+                h = ""
+            if not h or not (plan_dir / f"{h}.json").exists():
+                dangling += 1
+                print(f"by_key/{ref.name[:16]:<10} dangling ref "
+                      f"-> {h[:12] or '<empty>'}")
+    print(f"{len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+          f"verified: {len(entries) - bad} ok, {bad} bad, "
+          f"{dangling} dangling ref(s)")
+    return 1 if bad or dangling else 0
+
+
+def cmd_gc(store: planstore.PlanStore,
+           max_entries: Optional[int]) -> int:
+    """Manual eviction: stale-schema entries first, then LRU past the
+    cap (the same policy lazy GC applies on over-cap puts)."""
+    removed = store.gc(max_entries)
+    stats = store.stats()
+    print(f"gc removed {removed} entr{'y' if removed == 1 else 'ies'}; "
+          f"{stats['disk_size']} left "
+          f"({stats['disk_bytes'] / 2**20:.2f} MiB)")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.plan",
@@ -134,6 +183,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_diff = sub.add_parser("diff", help="decision-log diff of two artifacts")
     p_diff.add_argument("hash_a")
     p_diff.add_argument("hash_b")
+    sub.add_parser("verify",
+                   help="re-hash every artifact, report corrupt/stale")
+    p_gc = sub.add_parser("gc", help="manual eviction (stale-first, LRU)")
+    p_gc.add_argument("--max-entries", type=int, default=None,
+                      help="entry cap to shrink to (default: store cap)")
     args = ap.parse_args(argv)
 
     store = planstore.get_store(args.plan_dir or None)
@@ -142,6 +196,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         return cmd_list(plan_dir, store)
     if args.cmd == "show":
         return cmd_show(plan_dir, store, args.hash, args.log)
+    if args.cmd == "verify":
+        return cmd_verify(plan_dir, store)
+    if args.cmd == "gc":
+        return cmd_gc(store, args.max_entries)
     return cmd_diff(plan_dir, store, args.hash_a, args.hash_b)
 
 

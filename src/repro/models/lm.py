@@ -535,7 +535,13 @@ def init_paged_cache(arch: ArchConfig, batch_size: int, max_len: int,
     table mapping sequence positions to pool blocks (-1 = unassigned).
     SSM/conv states stay dense per-slot (they are O(1) in seq).  The
     geometry (block_len, n_blocks) is a plan decision
-    (``DataOrganizationPass`` via ``costmodel.kv_block_geometry``).
+    (``DataOrganizationPass`` via ``costmodel.kv_block_geometry``);
+    under 2-D pool sharding the block dim is additionally split
+    data-major into per-data-shard sub-pools, and the allocator filling
+    ``block_tbl`` must keep each slot's blocks inside the sub-pool of
+    the data shard hosting it (``serve.allocator.BlockAllocator``) —
+    the batch-partitioned ``flash_decode_paged`` combine masks out any
+    block its data row does not own.
     """
     L = arch.n_layers
     Hs = ssm_heads or arch.ssm_heads
@@ -566,9 +572,10 @@ def append_kv_paged(pool: jax.Array, new: jax.Array, pos: jax.Array,
     Slots whose owning table entry is unassigned (-1) are dropped — a
     freed slot's dummy decode never touches the pool.  ``start`` is the
     caller's first global block id when ``pool`` is one shard of a
-    sharded pool (``dist.flash_decode.flash_decode_paged``): blocks
-    owned elsewhere are dropped too.  Oracle:
-    :func:`repro.kernels.ref.paged_append_ref`.
+    sharded pool (``dist.flash_decode.flash_decode_paged`` — under 2-D
+    pool sharding the shard's offset linearizes its (data..., model)
+    mesh coordinates data-major): blocks owned elsewhere are dropped
+    too.  Oracle: :func:`repro.kernels.ref.paged_append_ref`.
     """
     N, bl = pool.shape[0], pool.shape[1]
     blk = jnp.take_along_axis(tbl, (pos // bl)[:, None], axis=1)[:, 0] - start

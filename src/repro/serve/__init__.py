@@ -1,2 +1,3 @@
+from repro.serve.allocator import BlockAllocator
 from repro.serve.engine import Request, ServeEngine
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["BlockAllocator", "Request", "ServeEngine"]

@@ -1,0 +1,94 @@
+"""Block-pool allocator for the paged KV cache — sub-pool aware.
+
+The serving engine's residency management for a paged plan is exactly
+this object: blocks are handed out on admission and returned on finish.
+Under 2-D pool sharding (:func:`repro.dist.flash_decode
+.pool_sharding_kind` == ``"2d"``) the pool splits data-major into one
+*sub-pool per data shard* and a slot may only hold blocks from the
+sub-pool of the data shard hosting it — a foreign block would be owned
+by no shard in the slot's data row and silently mask out of the
+combine.  The allocator enforces that contract structurally: every
+``allocate`` draws from one group's free list, and ``release`` returns
+each block to the group its id belongs to.
+
+Invariants (the property suite in ``tests/test_properties.py`` fuzzes
+these over random admit/finish/churn sequences):
+
+* conservation — ``free + in_use == n_blocks`` at every point;
+* no double-assignment — a block is owned by at most one holder;
+* group integrity — allocations never cross a sub-pool boundary;
+* no leaks — releasing everything restores ``free == n_blocks``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+
+class BlockAllocator:
+    """FIFO free-list allocator over ``groups`` equal sub-pools.
+
+    Group ``g`` owns the contiguous block ids ``[g * n/groups,
+    (g+1) * n/groups)`` — the data-major layout the 2-D pool's
+    PartitionSpec gives the block dim, so "group" == "data shard".
+    ``groups=1`` is the 1-D (or unsharded) pool.
+    """
+
+    def __init__(self, n_blocks: int, groups: int = 1):
+        if groups < 1:
+            raise ValueError(f"groups must be >= 1, got {groups}")
+        if n_blocks < 0 or n_blocks % groups:
+            raise ValueError(
+                f"n_blocks={n_blocks} must be a non-negative multiple of "
+                f"groups={groups} (equal sub-pools per data shard)")
+        self.n_blocks = n_blocks
+        self.groups = groups
+        self.group_size = n_blocks // groups
+        self._free: List[List[int]] = [
+            list(range(g * self.group_size, (g + 1) * self.group_size))
+            for g in range(groups)]
+        self._owned: set = set()
+
+    # ------------------------------------------------------------------
+    def group_of(self, block_id: int) -> int:
+        """The sub-pool a block id belongs to."""
+        if not 0 <= block_id < self.n_blocks:
+            raise ValueError(f"block id {block_id} outside pool "
+                             f"[0, {self.n_blocks})")
+        return block_id // self.group_size if self.group_size else 0
+
+    def free_in(self, group: int = 0) -> int:
+        return len(self._free[group])
+
+    @property
+    def free(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def allocate(self, need: int, group: int = 0) -> Optional[List[int]]:
+        """``need`` blocks from one sub-pool, or None if it cannot cover
+        them (callers treat None as "wait for a finisher" — partial
+        grants would deadlock two half-admitted requests)."""
+        if need < 0:
+            raise ValueError(f"need must be >= 0, got {need}")
+        free = self._free[group]
+        if need > len(free):
+            return None
+        blocks = [free.pop(0) for _ in range(need)]
+        self._owned.update(blocks)
+        return blocks
+
+    def release(self, blocks: Sequence[int]) -> None:
+        """Return blocks to their sub-pools (double frees are loud —
+        a silent one would let two slots share a block)."""
+        for b in blocks:
+            if b not in self._owned:
+                raise ValueError(
+                    f"block {b} is not currently allocated "
+                    "(double free, or a block this pool never owned)")
+            self._owned.discard(b)
+            self._free[self.group_of(b)].append(b)
+
+    def stats(self) -> Dict[str, int]:
+        free = self.free
+        return {"total": self.n_blocks, "free": free,
+                "in_use": self.n_blocks - free, "groups": self.groups}

@@ -23,9 +23,15 @@ allocates a block pool (``lm.init_paged_cache``) whose geometry the
 data-organization pass chose, hands each admitted request exactly the
 blocks it can ever touch, and *returns them to the pool on finish* —
 real reclamation, so slot churn frees memory instead of leaving masked
-rows resident.  When the pool cannot cover the head-of-line request,
-admission waits for a finisher (no over-subscription, no mid-flight
-eviction).
+rows resident.  On a data×model mesh the pool is 2-D sharded (block dim
+data-major over both axes, batch slots partitioned across data —
+``dist.flash_decode.pool_sharding_kind``), so the allocator works over
+*per-data-shard sub-pools* (``serve.allocator.BlockAllocator``): a slot
+may only hold blocks from the sub-pool of the data shard hosting it,
+because a foreign block would be owned by no shard in the slot's data
+row and mask out of the combine.  When no (slot, sub-pool) pair can
+cover the head-of-line request, admission waits for a finisher (no
+over-subscription, no mid-flight eviction).
 
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
@@ -83,7 +89,9 @@ class ServeEngine:
         self.kv_residency = ("paged" if kv_residency == "paged"
                              and arch.has_attention else "dense")
         if self.kv_residency == "paged":
+            import math
             from repro.core.costmodel import kv_block_len as _default_bl
+            from repro.serve.allocator import BlockAllocator
             self.block_len = kv_block_len or _default_bl(max_len)
             per_seq = -(-max_len // self.block_len)
             # never larger than this engine's slots can ever pin (a plan
@@ -91,27 +99,52 @@ class ServeEngine:
             # a plan-shrunk (budget-capped) pool stays shrunk
             cap = max_batch * per_seq
             n = min(kv_n_blocks, cap) if kv_n_blocks else cap
+            groups = 1
             if cfg.mesh is not None:
-                # preserve the plan's model-axis divisibility: a clamp
-                # that breaks it would silently downgrade the pool-
-                # sharded decode to the single-shard combine AND
-                # replicate the pool on every model shard
+                # preserve the plan's pool divisibility through the
+                # clamp: a clamp that breaks it would silently downgrade
+                # the pool-sharded decode (2-D -> 1-D -> single-shard)
+                # AND replicate the pool on the broken axis
+                from repro.dist.flash_decode import pool_sharding_kind
                 from repro.dist.sharding import mesh_sizes
-                msize = mesh_sizes(cfg.mesh).get(cfg.model_axis, 1)
-                if msize > 1 and kv_n_blocks and kv_n_blocks % msize == 0 \
-                        and n % msize:
-                    n = min(kv_n_blocks, msize * (-(-n // msize)))
+                sizes = mesh_sizes(cfg.mesh)
+                msize = sizes.get(cfg.model_axis, 1)
+                dsize = math.prod(sizes.get(a, 1) for a in cfg.data_axes)
+                aligns = []
+                if dsize > 1 and max_batch % dsize == 0:
+                    aligns.append(dsize * msize)
+                if msize > 1:
+                    aligns.append(msize)
+                for align in aligns:
+                    if align > 1 and n % align and \
+                            (not kv_n_blocks or kv_n_blocks % align == 0):
+                        n = align * (-(-n // align))
+                        if kv_n_blocks:
+                            n = min(kv_n_blocks, n)
+                        break
+                # sub-pool grouping exists for the 2-D combine's
+                # ownership contract; other decode impls (xla gather)
+                # read any block from anywhere, so constraining their
+                # admission would refuse servable requests
+                if cfg.decode_impl == "shard_map_flash" and \
+                        pool_sharding_kind(cfg.mesh, n, max_batch,
+                                           cfg.data_axes,
+                                           cfg.model_axis) == "2d":
+                    groups = dsize
             self.n_blocks = n
+            self.pool_groups = groups
             self.cache = lm.init_paged_cache(
                 arch, max_batch, max_len, self.block_len, self.n_blocks,
                 ssm_heads=ssm_heads, kv_heads=kv_heads)
-            self._free_blocks = list(range(self.n_blocks))
+            self._alloc = BlockAllocator(self.n_blocks, groups)
         else:
+            from repro.serve.allocator import BlockAllocator
             self.block_len = 0
             self.n_blocks = 0
+            self.pool_groups = 1
             self.cache = lm.init_cache(arch, max_batch, max_len,
                                        ssm_heads=ssm_heads, kv_heads=kv_heads)
-            self._free_blocks = []
+            self._alloc = BlockAllocator(0, 1)
         self.free_slots = list(range(max_batch))
         self.active: Dict[int, Request] = {}
         self.pending: List[Request] = []
@@ -137,11 +170,13 @@ class ServeEngine:
     def decode_path(self) -> str:
         """The decode implementation ticks actually run through.
 
-        ``"shard_map_flash"`` only when the sharded path really
+        ``"shard_map_flash_paged_2d"`` when the paged pool is 2-D
+        sharded (block dim over data×model, batch partitioned across
+        data); ``"shard_map_flash"`` when the 1-D sharded path really
         executes; ``"flash"`` when the internal single-shard combine
         takes over — model axis of size 1, or the sharded dim not
-        divisible by it (``max_len`` for a dense cache, ``n_blocks``
-        for a paged pool); ``"xla"`` when no mesh was provided.
+        divisible (``max_len`` for a dense cache, ``n_blocks`` for a
+        paged pool); ``"xla"`` when no mesh was provided.
         """
         impl = self.cfg.decode_impl
         if impl == "xla":
@@ -149,15 +184,19 @@ class ServeEngine:
         if self.cfg.mesh is None:
             return "xla"               # lm.decode_step's own guard
         if impl == "shard_map_flash":
-            from repro.dist.flash_decode import (uses_pool_sharding,
+            from repro.dist.flash_decode import (pool_sharding_kind,
                                                  uses_seq_sharding)
-            sharded = (uses_pool_sharding(self.cfg.mesh, self.n_blocks,
-                                          self.cfg.model_axis)
-                       if self.kv_residency == "paged" else
-                       uses_seq_sharding(self.cfg.mesh, self.max_len,
-                                         self.cfg.model_axis))
-            if not sharded:
-                return "flash"         # flash_decode's single-shard path
+            if self.kv_residency == "paged":
+                kind = pool_sharding_kind(
+                    self.cfg.mesh, self.n_blocks, self.max_batch,
+                    self.cfg.data_axes, self.cfg.model_axis)
+                if kind == "2d":
+                    return "shard_map_flash_paged_2d"
+                if kind == "none":
+                    return "flash"     # flash_decode's single-shard path
+            elif not uses_seq_sharding(self.cfg.mesh, self.max_len,
+                                       self.cfg.model_axis):
+                return "flash"
         return impl
 
     @classmethod
@@ -272,13 +311,17 @@ class ServeEngine:
                 "or lower max_new_tokens")
         if self.kv_residency == "paged":
             need = self._blocks_needed(len(prompt), max_new_tokens)
-            if need > self.n_blocks:
-                # admission would wait forever for frees that can never
-                # cover it — refuse loudly instead of a silent hang
+            sub = self.n_blocks // max(1, self.pool_groups)
+            if need > sub:
+                # a request draws all its blocks from ONE data shard's
+                # sub-pool; admission would wait forever for frees that
+                # can never cover it — refuse loudly, not a silent hang
                 raise ValueError(
                     f"request needs {need} blocks of {self.block_len} rows "
-                    f"but the pool holds only {self.n_blocks}; raise "
-                    "kv_n_blocks or lower max_new_tokens")
+                    f"but each sub-pool holds only {sub} "
+                    f"({self.n_blocks} blocks over {self.pool_groups} "
+                    "sub-pool(s)); raise kv_n_blocks or lower "
+                    "max_new_tokens")
         r = Request(self._rid, prompt, max_new_tokens, temperature,
                     t_submit=time.time())
         self._rid += 1
@@ -295,42 +338,68 @@ class ServeEngine:
         return -(-(plen + max_new) // self.block_len)
 
     def block_stats(self) -> Dict[str, int]:
-        """Pool accounting: dense engines report an empty (0-block) pool."""
-        free = len(self._free_blocks)
-        return {"total": self.n_blocks, "free": free,
-                "in_use": self.n_blocks - free}
+        """Pool accounting (``free + in_use`` always equals ``total``;
+        dense engines report an empty 0-block pool)."""
+        return self._alloc.stats()
+
+    def _slot_group(self, slot: int) -> int:
+        """The data-shard sub-pool that hosts a slot: the batch dim is
+        sharded contiguously across data, so slot ranges map 1:1 onto
+        the pool's data-major sub-pools."""
+        return slot * self.pool_groups // self.max_batch
+
+    def _place(self, r: Request, avail: List[int],
+               free_by_group: Dict[int, int]) -> Optional[int]:
+        """Reserve the first free slot (FIFO) whose sub-pool can cover
+        ``r``'s block budget; mutates both accounting structures."""
+        need = (self._blocks_needed(len(r.prompt), r.max_new_tokens)
+                if self.kv_residency == "paged" else 0)
+        for i, s in enumerate(avail):
+            if need <= free_by_group[self._slot_group(s)]:
+                free_by_group[self._slot_group(s)] -= need
+                return avail.pop(i)
+        return None
 
     def _admit(self) -> None:
         """Bucketed batched admission: all pending prompts of the
-        head-of-line's length that fit a free slot (and, when paged, the
-        block pool) are prefilled in ONE jitted call.  When the pool
-        cannot cover the head request, admission waits for a finisher —
-        head-of-line blocking, so exhaustion delays rather than starves.
+        head-of-line's length that fit a (slot, sub-pool) pair are
+        prefilled in ONE jitted call.  A request takes all its blocks
+        from the sub-pool of the data shard hosting its slot (2-D pool
+        sharding; one global pool when ``pool_groups == 1``).  When no
+        pair can cover the head request, admission waits for a
+        finisher — head-of-line blocking, so exhaustion delays rather
+        than starves.
         """
         while self.pending and self.free_slots:
             head = self.pending[0]
             plen = len(head.prompt)
-            if self.kv_residency == "paged" and \
-                    self._blocks_needed(plen, head.max_new_tokens) \
-                    > len(self._free_blocks):
+            avail = list(self.free_slots)
+            free_by_group = {g: self._alloc.free_in(g)
+                             for g in range(self.pool_groups)}
+            s0 = self._place(head, avail, free_by_group)
+            if s0 is None:
                 return                 # pool exhausted: wait for frees
-            group: List[Request] = []
+            group: List[Request] = [head]
+            slots: List[int] = [s0]
             rest: List[Request] = []
-            budget = len(self._free_blocks)
-            for r in self.pending:
-                need = (self._blocks_needed(len(r.prompt), r.max_new_tokens)
-                        if self.kv_residency == "paged" else 0)
-                if (len(group) < len(self.free_slots)
-                        and len(r.prompt) == plen and need <= budget):
-                    budget -= need
-                    group.append(r)
-                else:
+            for r in self.pending[1:]:
+                s = self._place(r, avail, free_by_group) \
+                    if len(r.prompt) == plen else None
+                if s is None:
                     rest.append(r)
+                else:
+                    group.append(r)
+                    slots.append(s)
             self.pending = rest
-            self._admit_group(group)
+            for s in slots:
+                self.free_slots.remove(s)
+            self._admit_group(group, slots)
 
-    def _admit_group(self, group: List[Request]) -> None:
-        """One jitted prefill for a same-length bucket of requests.
+    def _admit_group(self, group: List[Request],
+                     slots: List[int]) -> None:
+        """One jitted prefill for a same-length bucket of requests,
+        each with a pre-reserved slot (its sub-pool is the one the
+        request's blocks will come from).
 
         The batch dim is padded to the next power of two (dummy rows
         repeat the first prompt and are discarded), so each prompt
@@ -351,24 +420,27 @@ class ServeEngine:
         keys = jax.random.split(self._next_key(), len(group))
         live: List[Request] = []
         idxs: List[int] = []
+        live_slots: List[int] = []
         for i, r in enumerate(group):
             tok = self._sample(logits[i], r.temperature, keys[i])
             r.out_tokens.append(int(tok))
             r.t_first = time.time()
             if len(r.out_tokens) >= r.max_new_tokens:
                 # the prefill sample already met the budget: finish now —
-                # no decode tick to over-generate on, no cache copy, and
-                # (paged) no blocks ever allocated
+                # no decode tick to over-generate on, no cache copy, no
+                # blocks ever allocated, and the reserved slot goes back
                 r.done = True
                 r.t_done = r.t_first
                 self.finished.append(r)
+                self.free_slots.append(slots[i])
             else:
                 live.append(r)
                 idxs.append(i)
+                live_slots.append(slots[i])
         if not live:
             return
         plen = len(live[0].prompt)
-        slots = np.asarray([self.free_slots.pop(0) for _ in live], np.int32)
+        slots = np.asarray(live_slots, np.int32)
         gidx = np.asarray(idxs, np.int32)
         if self.arch.has_attention:
             if self.kv_residency == "paged":
@@ -391,9 +463,11 @@ class ServeEngine:
         """Move a bucket's prefilled KV rows into their pool blocks.
 
         Each survivor gets its full block budget now (prompt + every
-        decode append), the prompt rows are scattered block-wise into
-        the pool in one gather/reshape per cache tensor, and the block
-        table rows are installed (-1 padding past the allocation).
+        decode append) from *its slot's sub-pool* — admission reserved
+        the blocks, so the draw cannot fail — the prompt rows are
+        scattered block-wise into the pool in one gather/reshape per
+        cache tensor, and the block table rows are installed (-1
+        padding past the allocation).
         """
         bl = self.block_len
         nbp = -(-plen // bl)               # blocks holding prompt rows
@@ -402,7 +476,9 @@ class ServeEngine:
         prompt_blocks: List[int] = []
         for i, r in enumerate(live):
             need = self._blocks_needed(len(r.prompt), r.max_new_tokens)
-            r.blocks = [self._free_blocks.pop(0) for _ in range(need)]
+            r.blocks = self._alloc.allocate(
+                need, self._slot_group(int(slots[i])))
+            assert r.blocks is not None, "admission reserved these blocks"
             rows[i, :need] = r.blocks
             prompt_blocks.extend(r.blocks[:nbp])
         blk_ids = np.asarray(prompt_blocks, np.int32)
@@ -469,15 +545,15 @@ class ServeEngine:
     def _release_slot(self, slot: int, r: Request) -> None:
         """Return the slot — and, when paged, its blocks — to the pool.
 
-        This is real reclamation: the block ids go back on the free list
-        and the table row is cleared to -1, so the freed slot's decode
-        dummy neither writes to the pool (unassigned appends drop) nor
-        pins memory the next admission could use.
+        This is real reclamation: the block ids go back on their
+        sub-pool's free list and the table row is cleared to -1, so the
+        freed slot's decode dummy neither writes to the pool (unassigned
+        appends drop) nor pins memory the next admission could use.
         """
         self.free_slots.append(slot)
         self.slot_len[slot] = 0
         if self.kv_residency == "paged" and r.blocks:
-            self._free_blocks.extend(r.blocks)
+            self._alloc.release(r.blocks)
             r.blocks = []
             self.cache["block_tbl"] = \
                 self.cache["block_tbl"].at[slot].set(-1)

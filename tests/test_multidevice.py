@@ -129,19 +129,21 @@ def test_serve_from_plan_shard_map_flash_end_to_end():
 
 
 def test_flash_decode_paged_pool_sharded_matches_oracle():
-    """The paged combine over a pool sharded 8 ways on the model axis:
+    """The 1-D paged combine over a pool sharded on the model axis:
     owning-shard appends + per-shard partial softmax over owned blocks
-    == the gather oracle, for staggered tables with unassigned tails."""
+    == the gather oracle, for staggered tables with unassigned tails.
+    B=3 on data=2 cannot partition the batch, so the pool replicates
+    over the data axis and every data shard must append the FULL batch
+    or the replicas diverge — regression for the batch-sharded-append
+    bug (the partitioned-batch run is the 2-D test below)."""
     run_subprocess("""
         import jax, jax.numpy as jnp
-        from repro.dist.flash_decode import flash_decode_paged
+        from repro.dist.flash_decode import flash_decode_paged, \\
+            pool_sharding_kind
         from repro.kernels import ref
-        # data=2 with B divisible by it: the pool (no batch dim) is
-        # replicated over the data axis, so every data shard must append
-        # the FULL batch or the replicas diverge — regression for the
-        # batch-sharded-append bug
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        B, H, K, D, bl, N = 4, 8, 4, 16, 8, 16       # 4 blocks per shard
+        B, H, K, D, bl, N = 3, 8, 4, 16, 8, 16       # 4 blocks per shard
+        assert pool_sharding_kind(mesh, N, B) == "1d"
         ks = jax.random.split(jax.random.PRNGKey(0), 5)
         q = jax.random.normal(ks[0], (B, 1, H, D))
         kn = jax.random.normal(ks[1], (B, 1, K, D))
@@ -149,8 +151,8 @@ def test_flash_decode_paged_pool_sharded_matches_oracle():
         kp = jax.random.normal(ks[3], (N, bl, K, D))
         vp = jax.random.normal(ks[4], (N, bl, K, D))
         tbl = jnp.asarray([[0, 9, 3, -1], [14, 2, -1, -1],
-                           [5, 7, 11, 13], [1, 6, -1, -1]], jnp.int32)
-        for pos_list, win in (([16, 8, 31, 10], 0), ([20, 14, 27, 4], 8)):
+                           [5, 7, 11, 13]], jnp.int32)
+        for pos_list, win in (([16, 8, 31], 0), ([20, 14, 27], 8)):
             pos = jnp.asarray(pos_list, jnp.int32)
             ctx, kp2, vp2 = jax.jit(
                 lambda *a: flash_decode_paged(*a, mesh=mesh))(
@@ -163,6 +165,56 @@ def test_flash_decode_paged_pool_sharded_matches_oracle():
             assert err < 1e-5, (pos_list, win, err)
             assert bool(jnp.allclose(kp2, kr)), "paged append corrupted"
             assert bool(jnp.allclose(vp2, vr))
+        print("OK")
+    """)
+
+
+def test_flash_decode_paged_2d_matches_oracle():
+    """The 2-D paged combine on a 2x4 data×model mesh: the block dim is
+    sharded data-major over both axes, batch slots are partitioned (not
+    replicated) across data, appends land on the one (data, model)
+    shard owning the block, and the model-axis-only 3-term combine ==
+    the gather oracle — for staggered tables (each slot's blocks inside
+    its data shard's sub-pool, the allocator contract) with unassigned
+    tails and windows."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.dist.flash_decode import flash_decode_paged, \\
+            pool_sharding_kind
+        from repro.kernels import ref
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, H, K, D, bl, N = 4, 8, 4, 16, 8, 16   # 2 blocks/(data,model) shard
+        assert pool_sharding_kind(mesh, N, B) == "2d"
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, D))
+        kn = jax.random.normal(ks[1], (B, 1, K, D))
+        vn = jax.random.normal(ks[2], (B, 1, K, D))
+        kp = jax.random.normal(ks[3], (N, bl, K, D))
+        vp = jax.random.normal(ks[4], (N, bl, K, D))
+        # slots 0-1 live on data shard 0 (sub-pool ids [0, 8)), slots
+        # 2-3 on data shard 1 (ids [8, 16)); non-contiguous, unordered
+        tbl = jnp.asarray([[0, 5, 3, -1], [7, 2, -1, -1],
+                           [8, 15, 11, 13], [9, 14, -1, -1]], jnp.int32)
+        for pos_list, win in (([16, 8, 31, 10], 0), ([20, 14, 27, 4], 8),
+                              ([0, 15, 24, 9], 6)):
+            pos = jnp.asarray(pos_list, jnp.int32)
+            ctx, kp2, vp2 = jax.jit(
+                lambda *a: flash_decode_paged(*a, mesh=mesh))(
+                    q, kn, vn, kp, vp, tbl, pos, win)
+            kr = ref.paged_append_ref(kp, kn, pos, tbl)
+            vr = ref.paged_append_ref(vp, vn, pos, tbl)
+            r = ref.paged_decode_attention_ref(
+                q[:, 0], kr, vr, tbl, cache_len=pos + 1, window=win)
+            err = float(jnp.abs(ctx[:, 0] - r).max())
+            assert err < 1e-5, (pos_list, win, err)
+            assert bool(jnp.allclose(kp2, kr)), "2-D append corrupted"
+            assert bool(jnp.allclose(vp2, vr))
+        # the pool really lands sharded over BOTH axes under jit
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        kp_s = jax.device_put(kp, NamedSharding(mesh,
+                                                P(("data", "model"))))
+        ctx2, _, _ = jax.jit(lambda *a: flash_decode_paged(*a, mesh=mesh))(
+            q, kn, vn, kp_s, vp, tbl, jnp.asarray([16, 8, 31, 10]), 0)
         print("OK")
     """)
 
@@ -221,6 +273,128 @@ def test_serve_from_plan_paged_pool_sharded():
                 p, a[p.tobytes()], done2[0].out_tokens)
         print("OK")
     """, timeout=600)
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"])
+def test_serve_paged_2d_token_identity_vs_dense_sequential(name):
+    """The tentpole acceptance: on a data-degree>1 (2x4) mesh,
+    specialize() now records kv_residency=paged with 2-D geometry
+    (batch-partitioned sub-pools — the pre-2-D pass forced dense here),
+    ServeEngine.from_plan serves it end-to-end through
+    ``decode_path == "shard_map_flash_paged_2d"``, and a staggered
+    continuous batch is token-identical to the dense sequential oracle
+    through the same mesh — across attention / SSM / hybrid archs
+    (SSM-only has nothing to page and pins the honest dense fallback).
+
+    The staggered-vs-sequential comparison through the SAME 2-D path is
+    exact (the batching/allocator contract).  The cross-residency
+    comparison pins per-step fp32 logits within bf16 combine-rounding
+    tolerance and tokens exactly — except a *provable* near-tie argmax
+    flip (the divergent token must be the oracle's runner-up within a
+    tiny logit gap): the paged and dense combines partition the softmax
+    sum differently, the same documented rounding caveat as xla-vs-
+    flash, and a real bug (wrong block, wrong mask) shows up as an
+    O(1) logit error, not a near-tie swap.
+    """
+    run_subprocess(f"""
+        import dataclasses, jax, numpy as np
+        from repro.configs import ShapeConfig, get_arch
+        from repro.core.pipeline import specialize
+        from repro.models import lm
+        from repro.serve.engine import ServeEngine
+
+        name = {name!r}
+
+        class Probe(ServeEngine):
+            # capture each sampled step's fp32 logits (single-request
+            # engines only: one _sample call per emitted token)
+            def __init__(self, *a, **kw):
+                super().__init__(*a, **kw)
+                self.steps = []
+            def _sample(self, logits, temperature, key):
+                self.steps.append(np.asarray(
+                    logits[:self.arch.vocab_size], np.float32))
+                return super()._sample(logits, temperature, key)
+
+        arch = get_arch(name).reduced()
+        if arch.has_attention:
+            # GQA-on-wide-TP: kv=1 not shardable by model=4 -> seq spill
+            # -> the plan picks shard_map_flash
+            arch = dataclasses.replace(arch, n_kv_heads=1)
+        shape = ShapeConfig("serve_2d", "decode", 64, 4)
+        plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                          mesh_shape=(2, 4), cache=False)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        params = lm.init_params(arch, jax.random.PRNGKey(0),
+                                *plan.padded_sizes())
+        prompts = [np.arange(5, dtype=np.int32) % arch.vocab_size,
+                   (np.arange(11, dtype=np.int32) * 3) % arch.vocab_size,
+                   (np.arange(8, dtype=np.int32) * 7) % arch.vocab_size,
+                   (np.arange(11, dtype=np.int32) * 5) % arch.vocab_size,
+                   (np.arange(5, dtype=np.int32) * 2) % arch.vocab_size]
+
+        if arch.has_attention:
+            assert plan.estimates["decode_impl"] == "shard_map_flash"
+            assert plan.estimates["kv_residency"] == "paged", \\
+                plan.estimates.get("kv_residency")
+            assert plan.estimates["kv_pool_data_degree"] == 2
+            assert plan.estimates["kv_n_blocks"] % (2 * 4) == 0
+            assert plan.estimates["kv_paged_bytes"] \\
+                < plan.estimates["kv_dense_bytes"]
+            eng = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh)
+            assert eng.kv_residency == "paged"
+            assert eng.pool_groups == 2, eng.pool_groups
+            assert eng.decode_path == "shard_map_flash_paged_2d", \\
+                eng.decode_path
+            # the pool really lands sharded over BOTH mesh axes
+            kshard = eng.cache["k"].sharding.spec
+            assert kshard[1] in (("data", "model"), ["data", "model"]), \\
+                kshard
+        else:
+            assert "kv_residency" not in plan.estimates  # nothing to page
+            eng = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh)
+            assert eng.kv_residency == "dense"
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        done = eng.run_until_idle(max_ticks=64)
+        assert len(done) == 5 and all(len(r.out_tokens) == 4 for r in done)
+        stats = eng.block_stats()
+        assert stats["free"] == stats["total"], stats
+        got = {{r.prompt.tobytes(): r.out_tokens for r in done}}
+
+        # dense sequential oracle over the SAME mesh (seq-sharded
+        # flash-decode for attention archs)
+        dplan = specialize(arch, shape, mesh_axes=("data", "model"),
+                           mesh_shape=(2, 4), cache=False,
+                           kv_residency="dense")
+        for p in prompts:
+            ep = Probe.from_plan(plan, params, arch=arch, mesh=mesh)
+            ep.submit(p, max_new_tokens=4)
+            seq = ep.run_until_idle(max_ticks=32)[0].out_tokens
+            # staggered continuous batch == sequential single-request
+            # through the SAME path: exact
+            assert got[p.tobytes()] == seq, (p, got[p.tobytes()], seq)
+
+            ed = Probe.from_plan(dplan, params, arch=arch, mesh=mesh,
+                                 max_batch=1)
+            assert ed.kv_residency == "dense"
+            ed.submit(p, max_new_tokens=4)
+            dseq = ed.run_until_idle(max_ticks=32)[0].out_tokens
+            # cross-residency: token-identical, excusing only a provable
+            # near-tie argmax flip (runner-up within a tiny gap, logits
+            # within bf16 combine-rounding tolerance)
+            for i, (tp, td) in enumerate(zip(seq, dseq)):
+                if tp == td:
+                    continue
+                lp, ld = ep.steps[i], ed.steps[i]
+                diff = float(np.abs(lp - ld).max())
+                gap = float(ld[td] - ld[tp])
+                assert diff < 0.3 and 0.0 <= gap < 0.15, (
+                    "paged-2d diverged from the dense oracle outside "
+                    "near-tie tolerance", p, i, tp, td, diff, gap)
+                break          # prefixes differ from here on
+        print("OK", name)
+    """, timeout=900)
 
 
 def test_moe_shard_map_matches_gshard_on_mesh():

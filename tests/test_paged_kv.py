@@ -162,22 +162,36 @@ def test_decode_step_paged_matches_dense_cache():
 def test_kv_residency_plan_decision():
     from repro.configs import ShapeConfig
     from repro.core.pipeline import specialize
-    # model-only mesh (data degree 1): the pool replicates nowhere ->
-    # paged is the decision
+    # model-only mesh (data degree 1): one sub-pool, model-shardable
     plan = specialize("qwen2-vl-72b", "decode_32k", mesh_shape=(1, 16))
     assert plan.estimates["kv_residency"] == "paged"
     assert plan.estimates["kv_block_len"] >= 16
     assert plan.estimates["kv_n_blocks"] >= 1
     assert plan.estimates["kv_n_blocks"] % 16 == 0      # model-shardable
+    assert plan.estimates["kv_pool_data_degree"] == 1
     assert plan.estimates["kv_paged_bytes"] <= plan.estimates["kv_dense_bytes"]
     assert any(s == "kv_residency" for _, s, _, _ in plan.log)
 
-    # a >1 data degree would REPLICATE the pool (no batch dim): the
-    # decision honestly stays dense until 2-D pool sharding exists
+    # a >1 data degree now 2-D-shards the pool (data-major sub-pools,
+    # batch partitioned across data) instead of forcing dense — and the
+    # per-chip paged bytes land BELOW the dense stripes they replace
     dp = specialize("qwen2-vl-72b", "decode_32k")       # 16x16 mesh
-    assert dp.estimates["kv_residency"] == "dense"
-    assert any(s == "kv_residency" and "replicate" in why
+    assert dp.estimates["kv_residency"] == "paged"
+    assert dp.estimates["kv_pool_data_degree"] == 16
+    assert dp.estimates["kv_pool_model_degree"] == 16
+    assert dp.estimates["kv_n_blocks"] % (16 * 16) == 0  # 2-D-shardable
+    assert dp.estimates["kv_paged_bytes"] < dp.estimates["kv_dense_bytes"]
+    assert any(s == "kv_residency" and "2-D" in why
                for _, s, _, why in dp.log)
+
+    # ...but a batch that cannot partition over the data degree would
+    # force the pool back to data-replication: honestly dense
+    odd = specialize("qwen3-8b",
+                     ShapeConfig("decode_odd_batch", "decode", 512, 3),
+                     mesh_shape=(2, 4))
+    assert odd.estimates["kv_residency"] == "dense"
+    assert any(s == "kv_residency" and "partition" in why
+               for _, s, _, why in odd.log)
 
     # too shallow for >=2 blocks/seq -> dense
     shallow = specialize("qwen3-8b",
@@ -214,10 +228,19 @@ def test_costmodel_kv_block_geometry():
     # zero headroom is a real cap (the one-sequence floor), NOT uncapped
     zero = kv_block_geometry(32768, 128, 80, 8, 128, budget_bytes=0.0)
     assert zero.n_blocks == zero.blocks_per_seq
-    # data replication divides capacity; model alignment keeps the pool
-    # shardable (never below an aligned one-sequence floor)
+    # 2-D: the data degree still divides capacity (the reclamation
+    # bet), but the pool splits into data_shards sub-pools, each
+    # model-aligned and never below one sequence — the 16x16 case's
+    # raw 512-block target bumps to the 16 x 64-block sub-pool floor
     dp = kv_block_geometry(32768, 128, 80, 8, 128, data_shards=16, align=16)
-    assert dp.n_blocks == 128 * 64 // 16 and dp.n_blocks % 16 == 0
+    assert dp.data_degree == 16 and dp.model_degree == 16
+    assert dp.n_blocks == 16 * 64           # 16 sub-pools at the floor
+    assert dp.sub_pool_blocks == 64 and dp.n_blocks % (16 * 16) == 0
+    assert dp.paged_bytes < dp.dense_bytes
+    wide = kv_block_geometry(32768, 2048, 80, 8, 128,
+                             data_shards=16, align=16)
+    assert wide.n_blocks == 2048 * 64 // 16     # bet above the floor
+    assert wide.sub_pool_blocks % 16 == 0
     odd = kv_block_geometry(64, 3, 2, 2, 16, align=8)     # want=12 -> 8
     assert odd.n_blocks == 8
     floor = kv_block_geometry(64, 1, 2, 2, 16, align=8)   # per_seq=4 -> 8
@@ -258,3 +281,58 @@ def test_plan_cli_list_show_diff(capsys, tmp_path):
 
     with pytest.raises(SystemExit, match="no stored plan"):
         main(["--plan-dir", d, "show", "ffffffffffff"])
+
+
+def test_plan_cli_verify_reports_corrupt_and_stale(capsys, tmp_path):
+    from repro.core.pipeline import specialize
+    from repro.launch.plan import main
+    import json as _json
+
+    from repro.configs import ShapeConfig
+    d = tmp_path / "plans"
+    plans = [specialize("qwen3-8b",
+                        ShapeConfig(f"verify_{i}", "decode", seq, 2),
+                        mesh_shape=(1, 1), plan_dir=str(d))
+             for i, seq in enumerate((32, 64, 128))]
+    files = [d / f"{p.content_hash()}.json" for p in plans]
+    assert len({f.name for f in files}) == 3 and all(f.exists()
+                                                     for f in files)
+
+    # a healthy store verifies clean
+    assert main(["--plan-dir", str(d), "verify"]) == 0
+    out = capsys.readouterr().out
+    assert "0 bad" in out and "0 dangling" in out
+
+    # truncate one entry -> corrupt; stamp another stale; tamper the
+    # third's payload (valid JSON, wrong hash — only the re-hash sees
+    # it); dangle a by_key ref
+    files[0].write_text(files[0].read_text()[:40])
+    e = _json.loads(files[1].read_text())
+    e["schema"] = -1
+    files[1].write_text(_json.dumps(e))
+    e = _json.loads(files[2].read_text())
+    e["plan"]["arch"] = "tampered"
+    files[2].write_text(_json.dumps(e))
+    (d / "by_key").mkdir(exist_ok=True)
+    (d / "by_key" / "deadbeef").write_text("f" * 64)
+    assert main(["--plan-dir", str(d), "verify"]) == 1
+    out = capsys.readouterr().out
+    assert "corrupt" in out and "stale-schema" in out
+    assert "3 bad" in out and "dangling" in out
+
+
+def test_plan_cli_gc_manual_eviction(capsys, tmp_path):
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    from repro.launch.plan import main
+    d = tmp_path / "plans"
+    for i, seq in enumerate((32, 64, 128)):
+        specialize("qwen3-8b", ShapeConfig(f"gc_{i}", "decode", seq, 2),
+                   mesh_shape=(1, 1), plan_dir=str(d))
+    assert len(list(d.glob("*.json"))) == 3
+    assert main(["--plan-dir", str(d), "gc", "--max-entries", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "removed 2" in out
+    assert len(list(d.glob("*.json"))) == 1
+    # surviving store verifies clean (refs were trimmed with entries)
+    assert main(["--plan-dir", str(d), "verify"]) == 0

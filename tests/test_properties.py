@@ -1,102 +1,258 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests on the system's invariants.
+
+Two tiers: hypothesis-driven properties (skipped when hypothesis is not
+installed) and seeded stdlib-random fuzz that always runs — the block-
+allocator suite is in the second tier so the serving layer's invariants
+are exercised in every CI environment, not only where hypothesis
+happens to be available.
+"""
 
 import math
+import random
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
 
 from repro.core.costmodel import (MeshModel, allgather_bytes, allreduce_bytes,
-                                  reduce_scatter_bytes)
+                                  kv_block_geometry, reduce_scatter_bytes)
 from repro.dist.collectives import dequantize_int8, ef_compress, quantize_int8
 from repro.dist.sharding import resolve_pspec
 from repro.models.moe import _capacity
+from repro.serve.allocator import BlockAllocator
 
 
-AXIS_NAMES = st.sampled_from([None, "batch", "embed", "heads", "ff", "vocab"])
+AXIS_NAMES = [None, "batch", "embed", "heads", "ff", "vocab"]
 RULES = {"batch": "data", "embed": None, "heads": "model", "ff": "model",
          "vocab": "model"}
 SIZES = {"data": 16, "model": 16}
 
 
-@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
-       st.data())
-@settings(max_examples=200, deadline=None)
-def test_resolve_pspec_always_divides(shape, data):
-    axes = tuple(data.draw(AXIS_NAMES) for _ in shape)
-    spec = resolve_pspec(RULES, shape, axes, SIZES)
-    used = set()
-    for dim, s in zip(shape, tuple(spec) + (None,) * len(shape)):
-        if s is None:
-            continue
-        names = (s,) if isinstance(s, str) else tuple(s)
-        f = 1
-        for n in names:
-            assert n not in used          # a mesh axis shards one dim only
-            used.add(n)
-            f *= SIZES[n]
-        assert dim % f == 0               # divisibility repair worked
+# =====================================================================
+# block-allocator fuzz: randomized admit/finish/exhaustion/churn
+# sequences against the paged serving layer's invariants, on both 1-D
+# (one global pool) and 2-D (per-data-shard sub-pool) geometries.
+# Runs on seeded stdlib random so it exercises in every environment;
+# a hypothesis twin below widens the sequences when available.
+# =====================================================================
+
+#: (n_blocks, groups): 1-D pools and 2-D data-degree sub-pool splits
+POOL_GEOMETRIES = [(8, 1), (24, 1), (16, 2), (32, 4), (64, 8)]
 
 
-@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
-                min_size=1, max_size=2048))
-@settings(max_examples=100, deadline=None)
-def test_int8_quantization_error_bound(vals):
-    x = jnp.asarray(np.array(vals, np.float32))
-    q, s, pad = quantize_int8(x)
-    xr = dequantize_int8(q, s, pad, x.shape)
-    # per-block error bounded by scale/2 = amax/254
-    blocks = np.asarray(jnp.abs(x)).reshape(-1)
-    bound = max(blocks.max() / 254.0, 1e-6) * 1.001
-    assert float(jnp.abs(xr - x).max()) <= bound + 1e-6
+def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
+    """Drive one admit/finish sequence, asserting every invariant the
+    serving engine relies on after each step.
+
+    ``ops`` yields (kind, group, need) tuples; kind < 0.6 admits, else
+    finishes a random live holder.  Returns the live set for the
+    caller's drain check.
+    """
+    alloc = BlockAllocator(n_blocks, groups)
+    sub = n_blocks // groups
+    live = []                     # allocations currently held
+    owned = set()                 # model of every handed-out block
+    for kind, group, need, pick in ops:
+        if kind < 0.6 or not live:
+            got = alloc.allocate(need, group)
+            if got is None:
+                # exhaustion is exact: refusal iff the sub-pool cannot
+                # cover the request (head-of-line wait in the engine)
+                assert need > alloc.free_in(group)
+            else:
+                assert len(got) == need
+                assert not (set(got) & owned), "double-assigned block"
+                assert all(b // sub == group for b in got), \
+                    "allocation crossed a sub-pool boundary"
+                owned |= set(got)
+                live.append(got)
+        else:
+            got = live.pop(pick % len(live))
+            alloc.release(got)
+            owned -= set(got)
+        stats = alloc.stats()
+        assert stats["total"] == n_blocks
+        assert stats["free"] + stats["in_use"] == n_blocks, \
+            "blocks not conserved"
+        assert stats["in_use"] == len(owned)
+        assert sum(alloc.free_in(g) for g in range(groups)) == stats["free"]
+    return alloc, live, owned
 
 
-@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
-                min_size=8, max_size=256),
-       st.integers(2, 10))
-@settings(max_examples=50, deadline=None)
-def test_error_feedback_preserves_sum(vals, steps):
-    """Sum of delivered values + residual == sum of inputs (unbiasedness)."""
-    x = jnp.asarray(np.array(vals, np.float32))
-    err = None
-    delivered = jnp.zeros_like(x)
-    for _ in range(steps):
-        xh, err = ef_compress(x, err)
-        delivered = delivered + xh
-    total_in = float(jnp.sum(x)) * steps
-    total_out = float(jnp.sum(delivered)) + float(jnp.sum(
-        err.astype(jnp.float32)))
-    scale = max(abs(total_in), 1.0)
-    assert abs(total_in - total_out) / scale < 0.02
+@pytest.mark.parametrize("n_blocks,groups", POOL_GEOMETRIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_block_allocator_churn_invariants(n_blocks, groups, seed):
+    rng = random.Random(f"{n_blocks}/{groups}/{seed}")
+    sub = n_blocks // groups
+    ops = [(rng.random(), rng.randrange(groups),
+            rng.randint(0, sub + 1),      # +1: requests past sub capacity
+            rng.randrange(1 << 30)) for _ in range(400)]
+    alloc, live, owned = _fuzz_allocator(n_blocks, groups, ops, sub)
+    # drain: releasing everything restores the full pool — no leaks
+    for got in live:
+        alloc.release(got)
+    assert alloc.stats() == {"total": n_blocks, "free": n_blocks,
+                             "in_use": 0, "groups": groups}
 
 
-@given(st.integers(1, 100_000), st.integers(2, 64))
-@settings(max_examples=100, deadline=None)
-def test_ring_collective_inequalities(nbytes, n):
-    ar = allreduce_bytes(nbytes, n)
-    rs = reduce_scatter_bytes(nbytes, n)
-    ag = allgather_bytes(nbytes, n)
-    assert abs(ar - (rs + ag)) < 1e-6     # AR = RS + AG (ring identity)
-    assert 0 <= rs < nbytes
+def test_block_allocator_rejects_bad_usage():
+    with pytest.raises(ValueError, match="multiple"):
+        BlockAllocator(10, 4)             # unequal sub-pools
+    with pytest.raises(ValueError, match="groups"):
+        BlockAllocator(8, 0)
+    alloc = BlockAllocator(8, 2)
+    got = alloc.allocate(2, group=1)
+    assert got == [4, 5]                  # group 1 owns ids [4, 8)
+    alloc.release(got)
+    with pytest.raises(ValueError, match="double free"):
+        alloc.release(got)                # already back in the pool
+    with pytest.raises(ValueError, match="not currently allocated"):
+        alloc.release([0])                # never handed out
+    assert alloc.allocate(5, group=0) is None      # > sub-pool capacity
+    assert alloc.stats()["free"] == 8
 
 
-@given(st.integers(1, 65536), st.integers(1, 128), st.integers(1, 8),
-       st.floats(1.0, 2.0))
-@settings(max_examples=100, deadline=None)
-def test_moe_capacity_sane(tokens, experts, topk, cf):
-    c = _capacity(tokens, experts, topk, cf)
-    assert c >= 4 and c % 4 == 0
-    # enough capacity for a perfectly balanced router
-    assert c * experts >= min(tokens * topk, 4 * experts) * 0.99
+def test_block_allocator_matches_engine_block_stats_contract():
+    """The engine's block_stats() is exactly the allocator's stats():
+    the keys the serving tests (and the churn invariants above) rely on
+    are always present and always sum to n_blocks."""
+    alloc = BlockAllocator(16, 2)
+    a = alloc.allocate(3, 0)
+    b = alloc.allocate(8, 1)
+    s = alloc.stats()
+    assert s["total"] == 16 and s["in_use"] == 11 and s["free"] == 5
+    alloc.release(a + b)
+    assert alloc.stats()["free"] == 16
 
 
-@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8))
-@settings(max_examples=50, deadline=None)
-def test_mesh_model_device_count(a, b, c):
-    m = MeshModel(axes=("pod", "data", "model"), shape=(a, b, c))
-    assert m.n_devices == a * b * c
-    assert m.axis_size("data") == b
-    assert m.axis_size(None) == 1
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(POOL_GEOMETRIES),
+           st.lists(st.tuples(st.floats(0, 1), st.integers(0, 7),
+                              st.integers(0, 12), st.integers(0, 1 << 20)),
+                    min_size=1, max_size=300))
+    @settings(max_examples=50, deadline=None)
+    def test_block_allocator_churn_invariants_hypothesis(geom, raw_ops):
+        n_blocks, groups = geom
+        ops = [(k, g % groups, need, pick) for k, g, need, pick in raw_ops]
+        alloc, live, owned = _fuzz_allocator(n_blocks, groups, ops,
+                                             n_blocks // groups)
+        for got in live:
+            alloc.release(got)
+        assert alloc.stats()["free"] == n_blocks
+
+
+# =====================================================================
+# pool-geometry invariants (the 2-D sharding contract the pass and the
+# allocator both lean on) — seeded random, always runs
+# =====================================================================
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kv_block_geometry_2d_invariants(seed):
+    rng = random.Random(seed)
+    for _ in range(200):
+        seq = rng.choice([64, 256, 1024, 4096, 32768])
+        batch = rng.randint(1, 256)
+        d = rng.choice([1, 2, 4, 8, 16])
+        m = rng.choice([1, 2, 4, 8, 16])
+        budget = rng.choice([None, 0.0, 2.0**rng.randint(20, 40)])
+        geo = kv_block_geometry(seq, batch, 4, 2, 64, budget_bytes=budget,
+                                data_shards=d, align=m)
+        # the pool always splits into d equal, model-shardable sub-pools
+        assert geo.n_blocks % d == 0
+        sub = geo.n_blocks // d
+        assert sub % m == 0
+        # each sub-pool can always host at least one full sequence
+        assert sub >= geo.blocks_per_seq
+        # capacity never exceeds the worst case (every slot at max
+        # depth) or the aligned one-sequence-per-sub-pool floor
+        per = geo.blocks_per_seq
+        floor_sub = m * math.ceil(per / m) if m > 1 else per
+        assert geo.n_blocks <= max(batch * per, d * floor_sub)
+        assert geo.data_degree == d and geo.sub_pool_blocks == sub
+
+
+# =====================================================================
+# hypothesis tier (skipped cleanly when hypothesis is unavailable)
+# =====================================================================
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+           st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_resolve_pspec_always_divides(shape, data):
+        axes = tuple(data.draw(st.sampled_from(AXIS_NAMES))
+                     for _ in shape)
+        spec = resolve_pspec(RULES, shape, axes, SIZES)
+        used = set()
+        for dim, s in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if s is None:
+                continue
+            names = (s,) if isinstance(s, str) else tuple(s)
+            f = 1
+            for n in names:
+                assert n not in used      # a mesh axis shards one dim only
+                used.add(n)
+                f *= SIZES[n]
+            assert dim % f == 0           # divisibility repair worked
+
+    @given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                    min_size=1, max_size=2048))
+    @settings(max_examples=100, deadline=None)
+    def test_int8_quantization_error_bound(vals):
+        x = jnp.asarray(np.array(vals, np.float32))
+        q, s, pad = quantize_int8(x)
+        xr = dequantize_int8(q, s, pad, x.shape)
+        # per-block error bounded by scale/2 = amax/254
+        blocks = np.asarray(jnp.abs(x)).reshape(-1)
+        bound = max(blocks.max() / 254.0, 1e-6) * 1.001
+        assert float(jnp.abs(xr - x).max()) <= bound + 1e-6
+
+    @given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=8, max_size=256),
+           st.integers(2, 10))
+    @settings(max_examples=50, deadline=None)
+    def test_error_feedback_preserves_sum(vals, steps):
+        """Sum of delivered values + residual == sum of inputs."""
+        x = jnp.asarray(np.array(vals, np.float32))
+        err = None
+        delivered = jnp.zeros_like(x)
+        for _ in range(steps):
+            xh, err = ef_compress(x, err)
+            delivered = delivered + xh
+        total_in = float(jnp.sum(x)) * steps
+        total_out = float(jnp.sum(delivered)) + float(jnp.sum(
+            err.astype(jnp.float32)))
+        scale = max(abs(total_in), 1.0)
+        assert abs(total_in - total_out) / scale < 0.02
+
+    @given(st.integers(1, 100_000), st.integers(2, 64))
+    @settings(max_examples=100, deadline=None)
+    def test_ring_collective_inequalities(nbytes, n):
+        ar = allreduce_bytes(nbytes, n)
+        rs = reduce_scatter_bytes(nbytes, n)
+        ag = allgather_bytes(nbytes, n)
+        assert abs(ar - (rs + ag)) < 1e-6     # AR = RS + AG (ring identity)
+        assert 0 <= rs < nbytes
+
+    @given(st.integers(1, 65536), st.integers(1, 128), st.integers(1, 8),
+           st.floats(1.0, 2.0))
+    @settings(max_examples=100, deadline=None)
+    def test_moe_capacity_sane(tokens, experts, topk, cf):
+        c = _capacity(tokens, experts, topk, cf)
+        assert c >= 4 and c % 4 == 0
+        # enough capacity for a perfectly balanced router
+        assert c * experts >= min(tokens * topk, 4 * experts) * 0.99
+
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_mesh_model_device_count(a, b, c):
+        m = MeshModel(axes=("pod", "data", "model"), shape=(a, b, c))
+        assert m.n_devices == a * b * c
+        assert m.axis_size("data") == b
+        assert m.axis_size(None) == 1
