@@ -186,6 +186,7 @@ def table2_kernels() -> None:
 
     _decode_step_rows(ks, H, K, D)
     _paged_occupancy_rows(ks, H, K, D)
+    _admission_occupancy_rows(ks, H, K, D)
     _paged_2d_occupancy_rows(H, K, D)
 
     plan2 = specialize("mamba2-2.7b", "train_4k")
@@ -347,6 +348,64 @@ def _paged_occupancy_rows(ks, H, K, D) -> None:
              _time(paged_fn, q1, kn, vn, pool_k, pool_v, tbl, pos),
              fill + f";pinned_MiB={paged_mib:.0f};"
              f"block_len={bl};blocks={used}/{B * nb}")
+
+
+def _admission_occupancy_rows(ks, H, K, D) -> None:
+    """Paged decode_step under ``reserve`` vs ``grant`` admission at
+    25/50/100% slot occupancy — the grow-on-demand story next to the
+    PR-4/5 baselines.
+
+    Same pool, same kernel, same live slots mid-generation (each ~1/4
+    through a full-depth budget): ``reserve`` pins every live slot's
+    worst-case block budget from admission on, ``grant`` pins only the
+    blocks decode has actually crossed into.  The latency column is the
+    non-regression claim (admission mode changes the block *table*, not
+    the gather), the pinned_MiB column the sustained-occupancy win."""
+    from repro.core.costmodel import kv_block_len
+    from repro.models import lm
+    from repro.models.attention import attention_decode_paged
+
+    B, S = 8, 4096
+    bl = kv_block_len(S)
+    nb = S // bl
+    q1 = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+    kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+    vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+    pool_k = jax.random.normal(ks[3], (B * nb, bl, K, D)).astype(jnp.bfloat16)
+    pool_v = jax.random.normal(ks[4], (B * nb, bl, K, D)).astype(jnp.bfloat16)
+    row_bytes = 2 * K * D * 2                       # k+v, bf16
+
+    def paged_step(q, kn, vn, kp, vp, tbl, pos):
+        kp = lm.append_kv_paged(kp, kn, pos, tbl)
+        vp = lm.append_kv_paged(vp, vn, pos, tbl)
+        ctx = attention_decode_paged(q, kp, vp, tbl, cache_len=pos + 1)
+        return ctx, kp, vp
+
+    fn = jax.jit(paged_step)
+    for occ in (25, 50, 100):
+        n_live = max(1, B * occ // 100)
+        pos_np = np.zeros((B,), np.int32)
+        # each live slot mid-flight: ~1/4 of a full-depth max_new budget
+        pos_np[:n_live] = np.linspace(S // 4, S // 2, n_live) \
+            .astype(np.int32)
+        pos = jnp.asarray(pos_np)
+        for mode in ("reserve", "grant"):
+            tbl_np = np.full((B, nb), -1, np.int32)
+            used = 0
+            for b in range(n_live):
+                # grant holds the blocks decode crossed into; reserve
+                # holds the full worst-case budget from admission on
+                need = int(np.ceil((pos_np[b] + 1) / bl)) \
+                    if mode == "grant" else nb
+                tbl_np[b, :need] = np.arange(used, used + need) % (B * nb)
+                used += need
+            tbl = jnp.asarray(tbl_np)
+            mib = used * bl * row_bytes / 2**20
+            emit(f"decode_step/paged_{mode}/occ{occ}",
+                 _time(fn, q1, kn, vn, pool_k, pool_v, tbl, pos),
+                 f"occ={occ}%;live={n_live}/{B};admission={mode};"
+                 f"pinned_MiB={mib:.0f};block_len={bl};"
+                 f"blocks={used}/{B * nb}")
 
 
 def _paged_2d_occupancy_rows(H, K, D) -> None:

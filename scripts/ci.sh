@@ -11,11 +11,24 @@
 #                            # forced host devices (shard_map seq-sharded
 #                            # + 2-D pool-sharded paths run for real, not
 #                            # only when a developer remembers the flag)
+#   scripts/ci.sh --chaos    # fault-injection lane: seeded soak of the
+#                            # grow-on-demand serving path (random grant
+#                            # denials + simulated slow ticks) asserting
+#                            # zero token divergence and zero leaked
+#                            # blocks
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--chaos" ]]; then
+    echo "== chaos lane: grant-denial + slow-tick soak (seeds 0, 1) =="
+    python scripts/serve_smoke.py --chaos --seed 0
+    python scripts/serve_smoke.py --chaos --seed 1
+    echo "CI OK (chaos)"
+    exit 0
+fi
 
 if [[ "${1:-}" == "--dist" ]]; then
     echo "== dist lane: test_multidevice under 8 forced host devices =="

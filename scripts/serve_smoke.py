@@ -9,18 +9,27 @@ slots are freed and reused mid-flight), and assert every request
 finishes with the requested token count — and that the engine really
 decodes through the plan's implementation (no silent XLA fallback).
 
-Two residency modes:
+Three modes:
 
 * default — forces ``kv_residency="dense"`` (the PR3 dense seq-sharded
   contract this smoke has always pinned);
 * ``--paged`` — lets the pass choose the block pool (it does, for this
   depth), asserts the engine serves through it with bucketed batched
-  admission, and that every block returns to the pool at idle.
+  admission, and that every block returns to the pool at idle;
+* ``--chaos [--seed N]`` — seeded fault-injection soak on the
+  grow-on-demand admission path: random mid-decode grant denials (the
+  engine must walk its migrate/preempt ladder) plus simulated slow
+  ticks (the ``runtime/straggler.py`` StepTimer at the engine edge must
+  flag them), asserting **zero token divergence** — every finished
+  request matches its uninterrupted single-request oracle exactly —
+  and **zero leaked blocks** at idle.
 """
 
 import argparse
 import dataclasses
+import random
 import sys
+import time
 
 import jax
 import numpy as np
@@ -28,14 +37,94 @@ import numpy as np
 from repro.configs import ShapeConfig, get_arch
 from repro.core.pipeline import specialize
 from repro.models import lm
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import PreemptionPolicy, ServeEngine
+
+
+def chaos(seed: int) -> int:
+    """Fault-injection soak: plan-driven grant-mode engine vs chaos."""
+    arch = get_arch("qwen3-8b").reduced()
+    # 64-deep cache -> block_len 16, up to 4 blocks/seq: generations
+    # below cross 1-3 block boundaries each, so the grant path (and the
+    # injected denials) really fire
+    shape = ShapeConfig("serve_chaos", "decode", 64, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    assert plan.estimates.get("kv_residency") == "paged"
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, arch.vocab_size, (plen,)).astype(np.int32)
+               for plen in (5, 11, 8, 11, 5, 8, 14, 5)]
+    new_tokens = [20, 25, 30, 16, 35, 22, 18, 27]
+
+    # uninterrupted single-request oracles through the same plan
+    want = []
+    for p, mnt in zip(prompts, new_tokens):
+        ref = ServeEngine.from_plan(plan, params, arch=arch, max_batch=1)
+        ref.submit(p, max_new_tokens=mnt)
+        want.append(ref.run_until_idle(max_ticks=128)[0].out_tokens)
+
+    # the soak engine: grant admission (the plan for this worst-case
+    # pool says reserve — the override is the documented ops hatch),
+    # generous retry budget so chaos delays rather than sheds
+    eng = ServeEngine.from_plan(
+        plan, params, arch=arch, kv_admission="grant",
+        preemption=PreemptionPolicy(max_preemptions=64,
+                                    backoff_base_ticks=1,
+                                    backoff_cap_ticks=4))
+    chaos_rng = random.Random(seed)
+    eng.grant_fault = lambda: chaos_rng.random() < 0.3
+    inner = eng._decode
+
+    def slow_decode(p, c, b):
+        # simulated straggler tick: the engine's StepTimer (EWMA over
+        # tick times, runtime/straggler.py) must flag these
+        if eng.tick_timer.n >= 8 and chaos_rng.random() < 0.2:
+            time.sleep(0.05)
+        return inner(p, c, b)
+
+    eng._decode = slow_decode
+    for p, mnt in zip(prompts, new_tokens):
+        eng.submit(p, max_new_tokens=mnt)
+    done = eng.run_until_idle(max_ticks=2000)
+
+    assert not eng.shed, \
+        f"chaos shed {len(eng.shed)}: {[r.error for r in eng.shed]}"
+    assert len(done) == len(prompts), (len(done), len(prompts))
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for i, (p, w) in enumerate(zip(prompts, want)):
+        assert got[p.tobytes()] == w, (
+            f"TOKEN DIVERGENCE on request {i}: {got[p.tobytes()]} != {w}")
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"] > 0, f"blocks leaked: {stats}"
+    press = eng.pressure_stats()
+    assert press["preemptions"] >= 1, \
+        f"30% denial rate never forced an eviction: {press}"
+    assert press["straggler_ticks"] >= 1, \
+        f"injected slow ticks never flagged: {press}"
+    print(f"serve chaos OK (seed {seed}): {len(done)} requests "
+          f"token-identical under {press['grant_denials']} denials, "
+          f"{press['preemptions']} preemptions, "
+          f"{press['migrations']} migrations, "
+          f"{press['straggler_ticks']} straggler ticks; "
+          f"pool whole at {stats['total']} blocks")
+    return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
                     help="exercise the paged block-pool residency path")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault-injection soak (grant denials + "
+                         "slow ticks) asserting zero token divergence "
+                         "and zero leaked blocks")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="chaos-soak seed (denials, slow ticks, prompts)")
     args = ap.parse_args()
+    if args.chaos:
+        return chaos(args.seed)
 
     # kv_heads=1 on a (model=2) plan mesh -> seq spill -> shard_map_flash
     arch = dataclasses.replace(get_arch("qwen3-8b").reduced(), n_kv_heads=1)

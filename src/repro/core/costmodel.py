@@ -226,6 +226,8 @@ class KVBlockGeometry:
     paged_bytes: int               # pool footprint at this capacity
     data_degree: int = 1           # sub-pools the block dim splits into
     model_degree: int = 1          # model shards per sub-pool
+    admission: str = "reserve"     # "reserve" (worst-case up front) | "grant"
+    headroom_blocks: int = 0       # per-sub-pool free blocks past one max seq
 
     @property
     def table_cols(self) -> int:
@@ -282,6 +284,21 @@ def kv_block_geometry(
     need to make progress.  Every sub-pool is rounded to an ``align``
     multiple: a non-divisible sub-pool would silently *replicate* per
     model shard instead, blowing the very budget this sizing validated.
+
+    The geometry also fixes the **admission mode** the serving engine
+    must run: when the pool covers every slot's worst case
+    (``n_blocks >= batch * blocks_per_seq``) admission can safely
+    ``reserve`` the full budget up front — grants never fail, no
+    preemption machinery ever engages.  When the pool is *smaller* than
+    worst case (the 1/data_shards reclamation bet, or a budget cap),
+    worst-case reservation would refuse requests the pool can in fact
+    serve — so admission must be ``grant`` (grow-on-demand per block
+    boundary) with preemption as the backstop.  ``headroom_blocks``
+    records the per-sub-pool slack past one maximum sequence — the
+    cost model's estimate of how much concurrent growth a sub-pool
+    absorbs before the engine starts walking the migrate/preempt
+    ladder (0 means any second resident sequence rides entirely on
+    reclamation).
     """
     bl = kv_block_len(seq_len)
     per_seq = -(-seq_len // bl)
@@ -302,6 +319,8 @@ def kv_block_geometry(
     sub = max(sub, align * (-(-per_seq // align)) if align > 1 else per_seq)
     n = d * sub
     return KVBlockGeometry(
+        admission="reserve" if n >= want else "grant",
+        headroom_blocks=max(0, sub - per_seq),
         block_len=bl,
         blocks_per_seq=per_seq,
         n_blocks=n,

@@ -239,6 +239,25 @@ class DataOrganizationPass(Pass):
         plan.estimates["kv_paged_bytes"] = float(geo.paged_bytes)
         plan.estimates["kv_pool_data_degree"] = geo.data_degree
         plan.estimates["kv_pool_model_degree"] = geo.model_degree
+        plan.estimates["kv_admission"] = geo.admission
+        plan.estimates["kv_preempt_headroom"] = geo.headroom_blocks
+        if geo.admission == "grant":
+            self.record(
+                ctx, "kv_admission", "grant",
+                f"pool ({geo.n_blocks} blocks) is below the worst case "
+                f"({shape.global_batch}x{geo.blocks_per_seq} blocks) — "
+                "the reclamation bet; worst-case reservation would refuse "
+                "servable requests, so admission grows holdings one block "
+                "boundary at a time with preemption as the backstop "
+                f"(headroom {geo.headroom_blocks} block(s)/sub-pool past "
+                "one max sequence)")
+        else:
+            self.record(
+                ctx, "kv_admission", "reserve",
+                f"pool covers every slot's worst case "
+                f"({shape.global_batch}x{geo.blocks_per_seq} blocks) — "
+                "reserving full budgets at admission costs nothing and "
+                "mid-decode grants can never fail")
         for t in ctx.ir.by_role(Role.KV_CACHE):
             plan.placement(t.name).layout["kv_residency"] = "paged"
             plan.placement(t.name).decided_by.append(self.name + ":paged")

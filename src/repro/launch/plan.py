@@ -57,7 +57,8 @@ def _load(store: planstore.PlanStore, path: Path) -> FrozenPlan:
 
 
 _DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
-                  "kv_n_blocks", "moe_impl", "grad_compression")
+                  "kv_n_blocks", "kv_admission", "kv_preempt_headroom",
+                  "moe_impl", "grad_compression")
 
 
 def _dims(p: FrozenPlan) -> str:

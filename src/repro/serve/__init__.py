@@ -1,3 +1,5 @@
 from repro.serve.allocator import BlockAllocator
-from repro.serve.engine import Request, ServeEngine
-__all__ = ["BlockAllocator", "Request", "ServeEngine"]
+from repro.serve.engine import (OverloadError, PreemptedRequest,
+                                PreemptionPolicy, Request, ServeEngine)
+__all__ = ["BlockAllocator", "OverloadError", "PreemptedRequest",
+           "PreemptionPolicy", "Request", "ServeEngine"]

@@ -1,7 +1,8 @@
 """Block-pool allocator for the paged KV cache — sub-pool aware.
 
 The serving engine's residency management for a paged plan is exactly
-this object: blocks are handed out on admission and returned on finish.
+this object: blocks are handed out on admission (or granted one at a
+time as decode crosses block boundaries) and returned on finish.
 Under 2-D pool sharding (:func:`repro.dist.flash_decode
 .pool_sharding_kind` == ``"2d"``) the pool splits data-major into one
 *sub-pool per data shard* and a slot may only hold blocks from the
@@ -11,18 +12,29 @@ combine.  The allocator enforces that contract structurally: every
 ``allocate`` draws from one group's free list, and ``release`` returns
 each block to the group its id belongs to.
 
-Invariants (the property suite in ``tests/test_properties.py`` fuzzes
-these over random admit/finish/churn sequences):
+Grow-on-demand support (the grant admission mode): free lists are
+:class:`collections.deque` (O(1) grants at any pool size — ``pop(0)``
+on a list is O(n) and showed up at production pool sizes), and each
+sub-pool tracks a *low watermark* (the smallest free count it ever
+reached) so the engine's rebalancer can tell a persistently hot
+sub-pool from a transient dip without keeping its own history.
 
-* conservation — ``free + in_use == n_blocks`` at every point;
+Invariants (the property suite in ``tests/test_properties.py`` fuzzes
+these over random admit/grant/finish/churn sequences):
+
+* conservation — ``free + in_use == n_blocks`` at every point
+  (``stats()`` re-asserts this on every call);
 * no double-assignment — a block is owned by at most one holder;
 * group integrity — allocations never cross a sub-pool boundary;
-* no leaks — releasing everything restores ``free == n_blocks``.
+* no leaks — releasing everything restores ``free == n_blocks``;
+* no grant after free — a released block sits in its free list until
+  re-allocated; it is never still owned by its previous holder.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 
 class BlockAllocator:
@@ -44,10 +56,14 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self.groups = groups
         self.group_size = n_blocks // groups
-        self._free: List[List[int]] = [
-            list(range(g * self.group_size, (g + 1) * self.group_size))
+        self._free: List[Deque[int]] = [
+            deque(range(g * self.group_size, (g + 1) * self.group_size))
             for g in range(groups)]
         self._owned: set = set()
+        # per-sub-pool pressure telemetry: smallest free count ever seen
+        # (the rebalancer's "hot sub-pool" signal) and grant counters
+        self._low_water: List[int] = [self.group_size] * groups
+        self.grants: int = 0
 
     # ------------------------------------------------------------------
     def group_of(self, block_id: int) -> int:
@@ -64,18 +80,33 @@ class BlockAllocator:
     def free(self) -> int:
         return sum(len(f) for f in self._free)
 
+    def low_water(self, group: int = 0) -> int:
+        """Smallest free count this sub-pool has ever reached — 0 means
+        it has been fully drained at least once (a hot sub-pool)."""
+        return self._low_water[group]
+
     def allocate(self, need: int, group: int = 0) -> Optional[List[int]]:
         """``need`` blocks from one sub-pool, or None if it cannot cover
-        them (callers treat None as "wait for a finisher" — partial
-        grants would deadlock two half-admitted requests)."""
+        them (callers treat None as "wait for a finisher" or "preempt a
+        victim" — partial grants would deadlock two half-admitted
+        requests)."""
         if need < 0:
             raise ValueError(f"need must be >= 0, got {need}")
         free = self._free[group]
         if need > len(free):
             return None
-        blocks = [free.pop(0) for _ in range(need)]
+        blocks = [free.popleft() for _ in range(need)]
         self._owned.update(blocks)
+        self.grants += 1
+        if len(free) < self._low_water[group]:
+            self._low_water[group] = len(free)
         return blocks
+
+    def allocate_one(self, group: int = 0) -> Optional[int]:
+        """One-block grant (the grow-on-demand path: a slot asks for its
+        next block only when decode crosses a block boundary)."""
+        got = self.allocate(1, group)
+        return got[0] if got is not None else None
 
     def release(self, blocks: Sequence[int]) -> None:
         """Return blocks to their sub-pools (double frees are loud —
@@ -90,5 +121,12 @@ class BlockAllocator:
 
     def stats(self) -> Dict[str, int]:
         free = self.free
+        in_use = len(self._owned)
+        # conservation is the invariant everything else leans on; a
+        # broken free list must fail here, not as a downstream decode
+        # reading a double-assigned block
+        assert free + in_use == self.n_blocks, (
+            f"block conservation violated: free={free} in_use={in_use} "
+            f"total={self.n_blocks}")
         return {"total": self.n_blocks, "free": free,
-                "in_use": self.n_blocks - free, "groups": self.groups}
+                "in_use": in_use, "groups": self.groups}

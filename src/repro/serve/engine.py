@@ -20,28 +20,56 @@ slots never share a key within a tick.
 KV residency is a plan decision (``kv_residency`` in the artifact):
 ``dense`` keeps the classic per-slot ``max_len`` stripes; ``paged``
 allocates a block pool (``lm.init_paged_cache``) whose geometry the
-data-organization pass chose, hands each admitted request exactly the
-blocks it can ever touch, and *returns them to the pool on finish* —
-real reclamation, so slot churn frees memory instead of leaving masked
-rows resident.  On a data×model mesh the pool is 2-D sharded (block dim
-data-major over both axes, batch slots partitioned across data —
-``dist.flash_decode.pool_sharding_kind``), so the allocator works over
-*per-data-shard sub-pools* (``serve.allocator.BlockAllocator``): a slot
-may only hold blocks from the sub-pool of the data shard hosting it,
-because a foreign block would be owned by no shard in the slot's data
-row and mask out of the combine.  When no (slot, sub-pool) pair can
-cover the head-of-line request, admission waits for a finisher (no
-over-subscription, no mid-flight eviction).
+data-organization pass chose, and *returns blocks to the pool on
+finish* — real reclamation, so slot churn frees memory instead of
+leaving masked rows resident.  On a data×model mesh the pool is 2-D
+sharded (block dim data-major over both axes, batch slots partitioned
+across data — ``dist.flash_decode.pool_sharding_kind``), so the
+allocator works over *per-data-shard sub-pools*
+(``serve.allocator.BlockAllocator``): a slot may only hold blocks from
+the sub-pool of the data shard hosting it, because a foreign block
+would be owned by no shard in the slot's data row and mask out of the
+combine.
+
+Admission is a plan decision too (``kv_admission``): ``reserve`` hands
+an admitted request its full worst-case block budget up front (grants
+can never fail mid-decode, but the pool pins bytes long-tail requests
+never touch); ``grant`` is grow-on-demand — admission reserves only the
+prompt's blocks and a slot asks for its next block when decode crosses
+a block boundary.  Under ``grant`` exhaustion is a *handled* condition,
+degraded through three rungs instead of a serialization cliff:
+
+1. **grant** from the slot's own sub-pool;
+2. **migrate** — when the home sub-pool is hot but another idles (and
+   hosts a free slot), the slot's blocks, table row, and per-slot
+   states move to the donor sub-pool, preserving the slot→sub-pool
+   combine contract;
+3. **preempt** — a victim (fewest-tokens-generated first,
+   deadline-aware) is evicted to a host-side
+   :class:`PreemptedRequest` — tokens generated so far retained — and
+   re-admitted later via re-prefill of prompt+generated, with
+   exponential backoff and a per-request retry budget (the
+   :class:`repro.runtime.fault.RestartPolicy` shape, in ticks).
+
+Past the retry budget (or a missed deadline) the request is *shed*
+(``Request.error`` set, blocks released) rather than thrashed forever;
+once the recent preemption rate crosses the policy threshold,
+``submit()`` rejects new work with a typed :class:`OverloadError`
+instead of hanging the admission queue.  Preemption is token-identical
+for greedy sampling: a preempted-then-re-prefilled request emits
+exactly the tokens of an uninterrupted run (the re-prefill rebuilds the
+same KV rows; the discarded prefill sample is the token the host
+already holds).
 
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
 from the on-disk plan store in a different process) and derives the KV
-cache sizing, decode implementation, and batching limits from it — no
-ad-hoc kwargs needed between the compiler and the server.  With a
-``mesh`` the engine state is *placed* per the plan's axis rules
-(``dist.sharding.resolve_pspec``/``cache_pspecs``) and a plan that chose
-the seq-sharded ``shard_map_flash`` decode drives it end-to-end — no
-silent XLA fallback.
+cache sizing, decode implementation, admission mode, and batching
+limits from it — no ad-hoc kwargs needed between the compiler and the
+server.  With a ``mesh`` the engine state is *placed* per the plan's
+axis rules (``dist.sharding.resolve_pspec``/``cache_pspecs``) and a
+plan that chose the seq-sharded ``shard_map_flash`` decode drives it
+end-to-end — no silent XLA fallback.
 """
 
 from __future__ import annotations
@@ -49,7 +77,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +86,17 @@ import numpy as np
 from repro.configs.base import ArchConfig, get_arch
 from repro.models import lm
 from repro.models.lm import RunCfg
+from repro.runtime.fault import RestartPolicy
+from repro.runtime.straggler import StepTimer
+
+
+class OverloadError(RuntimeError):
+    """The engine is shedding load: the recent preemption rate crossed
+    the policy threshold, so new admissions would only thrash the pool
+    (evict work that re-prefills and evicts the next victim).  Callers
+    should back off and retry, or route to another replica — the typed
+    rejection is the graceful-degradation contract: reject loudly at
+    the door instead of hanging every queued request."""
 
 
 @dataclasses.dataclass
@@ -73,6 +112,64 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    deadline: Optional[float] = None   # absolute wall-clock deadline
+    preemptions: int = 0               # times evicted mid-decode
+    error: str = ""                    # set when shed (never finished)
+
+    @property
+    def feed_tokens(self) -> np.ndarray:
+        """The token sequence a (re-)prefill must build KV for: the
+        prompt, plus — after a preemption — every generated token except
+        the last (whose KV row does not exist yet; the next decode tick
+        feeds it)."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens[:-1], np.int32)])
+
+
+@dataclasses.dataclass
+class PreemptionPolicy:
+    """How the engine degrades when a mid-decode block grant fails.
+
+    Victim choice is fewest-tokens-generated first (least re-prefill
+    work thrown away) and deadline-aware: requests carrying a deadline
+    are spared while any deadline-free victim exists, and among
+    deadline'd candidates the latest deadline goes first.  Backoff and
+    retry budget reuse the :class:`repro.runtime.fault.RestartPolicy`
+    shape, measured in engine ticks (the serving clock) instead of
+    seconds.
+    """
+
+    max_preemptions: int = 4          # per-request retry budget
+    backoff_base_ticks: int = 1       # first re-admission delay
+    backoff_cap_ticks: int = 32       # exponential backoff ceiling
+    shed_window_ticks: int = 64       # sliding window for the rate
+    shed_rate: float = 0.5            # preemptions/tick that means overload
+
+    def restart_policy(self) -> RestartPolicy:
+        return RestartPolicy(max_restarts=self.max_preemptions,
+                             backoff_base_s=float(self.backoff_base_ticks),
+                             backoff_cap_s=float(self.backoff_cap_ticks))
+
+    def pick_victim(self, candidates: List[Request],
+                    now: float) -> Request:
+        def key(r: Request):
+            if r.deadline is None:
+                return (0, len(r.out_tokens), 0.0, r.rid)
+            # spare deadline'd requests; among them evict latest-deadline
+            return (1, len(r.out_tokens), -(r.deadline - now), r.rid)
+        return min(candidates, key=key)
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """Host-side parking spot for an evicted request: the tokens
+    generated so far stay on the request; its KV is rebuilt by
+    re-prefill at ``not_before_tick`` (exponential backoff)."""
+
+    request: Request
+    not_before_tick: int
 
 
 class ServeEngine:
@@ -80,10 +177,18 @@ class ServeEngine:
                  max_batch: int = 8, max_len: int = 512,
                  ssm_heads: int = 0, kv_heads: int = 0, seed: int = 0,
                  kv_residency: str = "dense", kv_block_len: int = 0,
-                 kv_n_blocks: int = 0):
+                 kv_n_blocks: int = 0, kv_admission: str = "reserve",
+                 kv_pool_groups: int = 0,
+                 preemption: Optional[PreemptionPolicy] = None):
+        if kv_admission not in ("reserve", "grant"):
+            raise ValueError(
+                f"kv_admission must be 'reserve' or 'grant', "
+                f"got {kv_admission!r}")
         self.arch, self.params, self.cfg = arch, params, cfg
         self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
+        self.kv_admission = kv_admission
+        self.preemption = preemption or PreemptionPolicy()
         # paged residency only exists for attention caches; an SSM-only
         # arch has no KV stripes to page (its states are O(1) in seq)
         self.kv_residency = ("paged" if kv_residency == "paged"
@@ -131,6 +236,15 @@ class ServeEngine:
                                            cfg.data_axes,
                                            cfg.model_axis) == "2d":
                     groups = dsize
+            if kv_pool_groups:
+                # explicit grouping: single-host emulation of the 2-D
+                # sub-pool contract (tests, diagnostics) — the slot→
+                # sub-pool mapping needs equal slot ranges per group
+                if n % kv_pool_groups or max_batch % kv_pool_groups:
+                    raise ValueError(
+                        f"kv_pool_groups={kv_pool_groups} must divide both "
+                        f"n_blocks={n} and max_batch={max_batch}")
+                groups = kv_pool_groups
             self.n_blocks = n
             self.pool_groups = groups
             self.cache = lm.init_paged_cache(
@@ -150,6 +264,24 @@ class ServeEngine:
         self.pending: List[Request] = []
         self._rid = 0
         self.finished: List[Request] = []
+        # overload-degradation state: host-side parked evictions, shed
+        # requests (never finished; Request.error says why), per-request
+        # backoff budgets, and the sliding preemption-rate window
+        self.preempted: List[PreemptedRequest] = []
+        self.shed: List[Request] = []
+        self._backoff: Dict[int, RestartPolicy] = {}
+        self._preempt_ticks: Deque[int] = deque(maxlen=4096)
+        self.tick = 0
+        self.preemptions = 0
+        self.migrations = 0
+        self.grant_denials = 0
+        # chaos/test hook: return True to deny one mid-decode grant even
+        # when blocks are free (drives the preemption path exactly like
+        # a hot sub-pool would; see scripts/serve_smoke.py --chaos)
+        self.grant_fault: Optional[Callable[[], bool]] = None
+        # tick-time telemetry (straggler detection at the engine edge)
+        self.tick_timer = StepTimer()
+        self.straggler_ticks = 0
         # per-slot valid lengths; mirrored into cache["pos"] every tick
         # (freed slots stay at 0 — their stale KV is masked out)
         self.slot_len = np.zeros((max_batch,), np.int32)
@@ -202,18 +334,25 @@ class ServeEngine:
     @classmethod
     def from_plan(cls, plan, params, *, arch: Optional[ArchConfig] = None,
                   mesh=None, max_batch: Optional[int] = None,
-                  max_len: Optional[int] = None, seed: int = 0
+                  max_len: Optional[int] = None, seed: int = 0,
+                  kv_admission: Optional[str] = None,
+                  preemption: Optional[PreemptionPolicy] = None
                   ) -> "ServeEngine":
         """Build an engine from the frozen plan artifact.
 
         The plan supplies everything the kwargs constructor asks for:
         the RunCfg (flash-attention tiles, padded head counts, decode
         implementation, pallas-vs-ref dispatch), the KV-cache sizing
-        (padded kv/ssm heads), and the batching limits (the workload
-        dims carried in the artifact).  ``arch`` overrides the registry
-        lookup for reduced/custom configs whose name shadows a
-        registered one; ``max_batch``/``max_len`` override the plan
-        limits (e.g. a single-host deployment of a decode_32k plan).
+        (padded kv/ssm heads), the admission mode the cost model chose
+        (``kv_admission`` — grow-on-demand grants when the pool is the
+        reclamation bet, worst-case reservation when it covers every
+        slot), and the batching limits (the workload dims carried in
+        the artifact).  ``arch`` overrides the registry lookup for
+        reduced/custom configs whose name shadows a registered one;
+        ``max_batch``/``max_len`` override the plan limits (e.g. a
+        single-host deployment of a decode_32k plan); ``kv_admission``
+        overrides the plan's admission mode (an ops escape hatch —
+        e.g. forcing ``reserve`` while diagnosing preemption churn).
 
         With a ``mesh`` the engine's params and KV cache are placed per
         the plan's axis rules and a ``shard_map_flash`` decode decision
@@ -270,7 +409,11 @@ class ServeEngine:
                   kv_residency=str(plan.estimates.get("kv_residency",
                                                       "dense")),
                   kv_block_len=int(plan.estimates.get("kv_block_len", 0)),
-                  kv_n_blocks=int(plan.estimates.get("kv_n_blocks", 0)))
+                  kv_n_blocks=int(plan.estimates.get("kv_n_blocks", 0)),
+                  kv_admission=(kv_admission if kv_admission is not None
+                                else str(plan.estimates.get("kv_admission",
+                                                            "reserve"))),
+                  preemption=preemption)
         eng.plan = plan
         if mesh is not None:
             eng._place_on_mesh(mesh)
@@ -300,7 +443,15 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request.  ``deadline_s`` (relative seconds) sets a
+        per-request deadline: still-pending requests past it are shed
+        (``Request.error``) instead of served late, and deadline'd
+        requests are spared by victim selection while any deadline-free
+        victim exists.  Raises :class:`OverloadError` while the engine
+        is past its preemption-rate threshold — reject at the door, not
+        a queue that can only thrash."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) + max_new_tokens > self.max_len:
             # past capacity the per-slot append clamps onto the last cache
@@ -314,33 +465,81 @@ class ServeEngine:
             sub = self.n_blocks // max(1, self.pool_groups)
             if need > sub:
                 # a request draws all its blocks from ONE data shard's
-                # sub-pool; admission would wait forever for frees that
-                # can never cover it — refuse loudly, not a silent hang
+                # sub-pool; even grow-on-demand admission would hold the
+                # full budget simultaneously by its last tick — refuse
+                # loudly, not a silent hang (or a preemption storm)
                 raise ValueError(
                     f"request needs {need} blocks of {self.block_len} rows "
                     f"but each sub-pool holds only {sub} "
                     f"({self.n_blocks} blocks over {self.pool_groups} "
                     "sub-pool(s)); raise kv_n_blocks or lower "
                     "max_new_tokens")
+        if self.overloaded():
+            raise OverloadError(
+                f"engine is shedding load: {self._recent_preemptions()} "
+                f"preemption(s) in the last "
+                f"{self.preemption.shed_window_ticks} ticks exceeds the "
+                f"shed rate {self.preemption.shed_rate}/tick — back off "
+                "and retry, or route to another replica")
         r = Request(self._rid, prompt, max_new_tokens, temperature,
                     t_submit=time.time())
+        if deadline_s is not None:
+            r.deadline = r.t_submit + deadline_s
         self._rid += 1
         self.pending.append(r)
         return r.rid
 
     def _blocks_needed(self, plen: int, max_new: int) -> int:
         """Blocks covering every cache row the request can ever touch
-        (``plen`` prompt rows + one append per decode tick).  A request
+        (``plen`` prompt rows + one append per decode tick) — its
+        lifetime *peak* holding under either admission mode.  A request
         the prefill sample already satisfies (``max_new <= 1``) finishes
         before any cache write and needs none."""
         if max_new <= 1:
             return 0
         return -(-(plen + max_new) // self.block_len)
 
+    def _admission_blocks(self, r: Request) -> int:
+        """Blocks admission must secure before prefilling ``r``:
+        the full worst-case budget under ``reserve`` (mid-decode grants
+        can then never fail), just the blocks covering the (re-)prefill
+        rows under ``grant`` (the rest arrive one block boundary at a
+        time)."""
+        if self.kv_residency != "paged":
+            return 0
+        if r.max_new_tokens <= 1 and not r.out_tokens:
+            return 0                   # satisfied by the prefill sample
+        if self.kv_admission == "grant":
+            return -(-len(r.feed_tokens) // self.block_len)
+        return self._blocks_needed(len(r.prompt), r.max_new_tokens)
+
     def block_stats(self) -> Dict[str, int]:
         """Pool accounting (``free + in_use`` always equals ``total``;
         dense engines report an empty 0-block pool)."""
         return self._alloc.stats()
+
+    def pressure_stats(self) -> Dict[str, Any]:
+        """Overload-degradation telemetry: how often the engine had to
+        fall back down the grant → migrate → preempt → shed ladder."""
+        return {"tick": self.tick,
+                "preemptions": self.preemptions,
+                "migrations": self.migrations,
+                "grant_denials": self.grant_denials,
+                "shed": len(self.shed),
+                "parked": len(self.preempted),
+                "straggler_ticks": self.straggler_ticks,
+                "overloaded": self.overloaded()}
+
+    def _recent_preemptions(self) -> int:
+        lo = self.tick - self.preemption.shed_window_ticks
+        return sum(1 for t in self._preempt_ticks if t > lo)
+
+    def overloaded(self) -> bool:
+        """True while the recent preemption rate says new admissions
+        would only thrash (the load-shedding trigger)."""
+        return (self._recent_preemptions()
+                > self.preemption.shed_rate
+                * self.preemption.shed_window_ticks)
 
     def _slot_group(self, slot: int) -> int:
         """The data-shard sub-pool that hosts a slot: the batch dim is
@@ -351,9 +550,9 @@ class ServeEngine:
     def _place(self, r: Request, avail: List[int],
                free_by_group: Dict[int, int]) -> Optional[int]:
         """Reserve the first free slot (FIFO) whose sub-pool can cover
-        ``r``'s block budget; mutates both accounting structures."""
-        need = (self._blocks_needed(len(r.prompt), r.max_new_tokens)
-                if self.kv_residency == "paged" else 0)
+        ``r``'s admission block need; mutates both accounting
+        structures."""
+        need = self._admission_blocks(r)
         for i, s in enumerate(avail):
             if need <= free_by_group[self._slot_group(s)]:
                 free_by_group[self._slot_group(s)] -= need
@@ -362,17 +561,17 @@ class ServeEngine:
 
     def _admit(self) -> None:
         """Bucketed batched admission: all pending prompts of the
-        head-of-line's length that fit a (slot, sub-pool) pair are
-        prefilled in ONE jitted call.  A request takes all its blocks
-        from the sub-pool of the data shard hosting its slot (2-D pool
-        sharding; one global pool when ``pool_groups == 1``).  When no
-        pair can cover the head request, admission waits for a
+        head-of-line's feed length that fit a (slot, sub-pool) pair are
+        prefilled in ONE jitted call.  A request takes its admission
+        blocks from the sub-pool of the data shard hosting its slot
+        (2-D pool sharding; one global pool when ``pool_groups == 1``).
+        When no pair can cover the head request, admission waits for a
         finisher — head-of-line blocking, so exhaustion delays rather
-        than starves.
+        than starves (and ``run_until_idle`` raises on true deadlock).
         """
         while self.pending and self.free_slots:
             head = self.pending[0]
-            plen = len(head.prompt)
+            plen = len(head.feed_tokens)
             avail = list(self.free_slots)
             free_by_group = {g: self._alloc.free_in(g)
                              for g in range(self.pool_groups)}
@@ -384,7 +583,7 @@ class ServeEngine:
             rest: List[Request] = []
             for r in self.pending[1:]:
                 s = self._place(r, avail, free_by_group) \
-                    if len(r.prompt) == plen else None
+                    if len(r.feed_tokens) == plen else None
                 if s is None:
                     rest.append(r)
                 else:
@@ -399,13 +598,16 @@ class ServeEngine:
                      slots: List[int]) -> None:
         """One jitted prefill for a same-length bucket of requests,
         each with a pre-reserved slot (its sub-pool is the one the
-        request's blocks will come from).
+        request's blocks will come from).  A resumed (previously
+        preempted) request's feed is prompt+generated-so-far: the
+        prefill rebuilds its KV rows and its sample is discarded — the
+        host already holds the token it would re-derive.
 
         The batch dim is padded to the next power of two (dummy rows
         repeat the first prompt and are discarded), so each prompt
         length compiles at most ``log2(max_batch)`` prefill programs
         instead of one per arrival-group size."""
-        toks = np.stack([r.prompt for r in group])
+        toks = np.stack([r.feed_tokens for r in group])
         padded = 1
         while padded < len(group):
             padded *= 2
@@ -422,6 +624,13 @@ class ServeEngine:
         idxs: List[int] = []
         live_slots: List[int] = []
         for i, r in enumerate(group):
+            if r.out_tokens:
+                # resumed after preemption: keep the retained tokens,
+                # keep decoding from where the eviction cut in
+                live.append(r)
+                idxs.append(i)
+                live_slots.append(slots[i])
+                continue
             tok = self._sample(logits[i], r.temperature, keys[i])
             r.out_tokens.append(int(tok))
             r.t_first = time.time()
@@ -439,7 +648,7 @@ class ServeEngine:
                 live_slots.append(slots[i])
         if not live:
             return
-        plen = len(live[0].prompt)
+        plen = len(live[0].feed_tokens)
         slots = np.asarray(live_slots, np.int32)
         gidx = np.asarray(idxs, np.int32)
         if self.arch.has_attention:
@@ -462,23 +671,25 @@ class ServeEngine:
                                gidx: np.ndarray, cacheg, plen: int) -> None:
         """Move a bucket's prefilled KV rows into their pool blocks.
 
-        Each survivor gets its full block budget now (prompt + every
-        decode append) from *its slot's sub-pool* — admission reserved
-        the blocks, so the draw cannot fail — the prompt rows are
+        Each survivor gets its admission block budget now (the full
+        worst-case budget under ``reserve``, just the feed rows' blocks
+        under ``grant``) from *its slot's sub-pool* — admission reserved
+        the blocks, so the draw cannot fail — the feed rows are
         scattered block-wise into the pool in one gather/reshape per
         cache tensor, and the block table rows are installed (-1
         padding past the allocation).
         """
         bl = self.block_len
-        nbp = -(-plen // bl)               # blocks holding prompt rows
+        nbp = -(-plen // bl)               # blocks holding prefilled rows
         nb_cols = self.cache["block_tbl"].shape[1]
         rows = np.full((len(live), nb_cols), -1, np.int32)
         prompt_blocks: List[int] = []
         for i, r in enumerate(live):
-            need = self._blocks_needed(len(r.prompt), r.max_new_tokens)
+            need = self._admission_blocks(r)
             r.blocks = self._alloc.allocate(
                 need, self._slot_group(int(slots[i])))
             assert r.blocks is not None, "admission reserved these blocks"
+            assert need >= nbp, (need, nbp)
             rows[i, :need] = r.blocks
             prompt_blocks.extend(r.blocks[:nbp])
         blk_ids = np.asarray(prompt_blocks, np.int32)
@@ -494,6 +705,188 @@ class ServeEngine:
         self.cache["block_tbl"] = \
             self.cache["block_tbl"].at[slots].set(jnp.asarray(rows))
 
+    # ---------------- grow-on-demand grants + degradation ladder ------
+    def _needs_block(self, r: Request) -> bool:
+        """True when this tick's append row falls past the blocks the
+        slot currently holds (decode crossed a block boundary)."""
+        return len(r.blocks) < int(self.slot_len[r.slot]) \
+            // self.block_len + 1
+
+    def _grant(self, group: int) -> Optional[int]:
+        """One-block grant from a sub-pool, through the chaos hook."""
+        if self.grant_fault is not None and self.grant_fault():
+            self.grant_denials += 1
+            return None
+        blk = self._alloc.allocate_one(group)
+        if blk is None:
+            self.grant_denials += 1
+        return blk
+
+    def _install_block(self, r: Request, blk: int) -> None:
+        r.blocks.append(blk)
+        self.cache["block_tbl"] = self.cache["block_tbl"].at[
+            r.slot, len(r.blocks) - 1].set(blk)
+
+    def _ensure_grants(self) -> None:
+        """Grant admission: before a decode tick, every active slot must
+        hold the block its append row lands in — a missing table entry
+        would silently *drop* the append (the freed-slot contract) and
+        corrupt the request.  Grant failures degrade down the ladder:
+        migrate the slot to an idling sub-pool, else preempt a victim
+        (possibly the needy request itself) and retry.  After this
+        returns, every remaining active slot can decode."""
+        if self.kv_residency != "paged" or self.kv_admission != "grant":
+            return
+        for r in sorted(self.active.values(), key=lambda x: x.rid):
+            guard = 0
+            while self.active.get(r.slot) is r and self._needs_block(r):
+                guard += 1
+                assert guard <= self.max_batch + self.n_blocks + 2, \
+                    "grant ladder did not converge"
+                blk = self._grant(self._slot_group(r.slot))
+                if blk is not None:
+                    self._install_block(r, blk)
+                    continue
+                if self._try_migrate(r):
+                    continue
+                self._preempt_for(r)
+
+    def _try_migrate(self, r: Request) -> bool:
+        """Rung 2: move ``r`` — blocks, table row, per-slot states — to
+        a donor sub-pool that idles while its home pool is hot.  The
+        donor must host a free slot (the batch dim is partitioned across
+        data, so changing sub-pool means changing slot) and cover the
+        current holding plus the block being asked for; the idlest such
+        donor wins.  Preserves the slot→sub-pool combine contract: after
+        the move every block the slot holds lives in its new data
+        shard's sub-pool."""
+        if self.pool_groups <= 1:
+            return False
+        src = self._slot_group(r.slot)
+        need_now = len(r.blocks) + 1
+        best = None
+        for s2 in sorted(self.free_slots):
+            g2 = self._slot_group(s2)
+            if g2 == src or self._alloc.free_in(g2) < need_now:
+                continue
+            if best is None or self._alloc.free_in(g2) \
+                    > self._alloc.free_in(self._slot_group(best)):
+                best = s2
+        if best is None:
+            return False
+        s1, s2 = r.slot, best
+        g2 = self._slot_group(s2)
+        new_blocks = self._alloc.allocate(need_now, g2)
+        assert new_blocks is not None, "donor free count was just checked"
+        old = list(r.blocks)
+        if old:
+            old_ids = jnp.asarray(old, jnp.int32)
+            new_ids = jnp.asarray(new_blocks[:len(old)], jnp.int32)
+            for key in ("k", "v"):
+                self.cache[key] = self.cache[key].at[:, new_ids].set(
+                    self.cache[key][:, old_ids])
+        for key in ("ssm", "conv"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, s2].set(
+                    self.cache[key][:, s1])
+        rows = np.full((int(self.cache["block_tbl"].shape[1]),), -1,
+                       np.int32)
+        rows[:need_now] = new_blocks
+        tbl = self.cache["block_tbl"].at[s2].set(jnp.asarray(rows))
+        self.cache["block_tbl"] = tbl.at[s1].set(-1)
+        self._alloc.release(old)
+        r.blocks = list(new_blocks)
+        del self.active[s1]
+        self.active[s2] = r
+        r.slot = int(s2)
+        self.free_slots.remove(s2)
+        self.free_slots.append(s1)
+        self.slot_len[s2] = self.slot_len[s1]
+        self.slot_len[s1] = 0
+        self.migrations += 1
+        return True
+
+    def _preempt_for(self, r: Request) -> None:
+        """Rung 3: evict a victim from the needy slot's sub-pool so its
+        grant can succeed (the victim may be the needy request itself,
+        which also resolves the need)."""
+        group = self._slot_group(r.slot)
+        cands = [a for a in self.active.values()
+                 if self._slot_group(a.slot) == group]
+        victim = self.preemption.pick_victim(cands, time.time())
+        self._preempt(victim)
+
+    def _preempt(self, r: Request) -> None:
+        """Evict an active request to the host side: blocks and slot
+        return to the pool, the tokens generated so far stay on the
+        request, and re-admission (a re-prefill of prompt+generated) is
+        scheduled with exponential backoff.  Past the retry budget — or
+        an already-missed deadline — the request is shed instead."""
+        slot = r.slot
+        del self.active[slot]
+        self._release_slot(slot, r)
+        r.slot = -1
+        r.preemptions += 1
+        self.preemptions += 1
+        self._preempt_ticks.append(self.tick)
+        if r.deadline is not None and time.time() > r.deadline:
+            self._shed(r, "deadline missed at preemption — a re-prefill "
+                          "could not finish in time")
+            return
+        pol = self._backoff.setdefault(r.rid,
+                                       self.preemption.restart_policy())
+        try:
+            delay = pol.next_delay()
+        except RuntimeError:
+            self._shed(r, "preemption retry budget exhausted "
+                          f"({self.preemption.max_preemptions})")
+            return
+        self.preempted.append(PreemptedRequest(r, self.tick + int(delay)))
+
+    def preempt(self, rid: int) -> None:
+        """Forcibly evict an active request (chaos/test hook and ops
+        escape hatch; the engine preempts autonomously on grant
+        failure)."""
+        for r in self.active.values():
+            if r.rid == rid:
+                self._preempt(r)
+                return
+        raise KeyError(f"request {rid} is not active")
+
+    def _shed(self, r: Request, why: str) -> None:
+        assert not r.blocks, "shed request still holds blocks"
+        r.error = why
+        self.shed.append(r)
+        self._backoff.pop(r.rid, None)
+
+    def _shed_expired_pending(self) -> None:
+        if not any(r.deadline is not None for r in self.pending):
+            return
+        now = time.time()
+        keep: List[Request] = []
+        for r in self.pending:
+            if r.deadline is not None and now > r.deadline:
+                self._shed(r, f"deadline missed while pending "
+                              f"(tick {self.tick})")
+            else:
+                keep.append(r)
+        self.pending = keep
+
+    def _readmit_preempted(self) -> None:
+        """Parked evictions whose backoff expired rejoin the *front* of
+        the pending queue (oldest rid first) — they already burned a
+        slot's worth of work; new arrivals should not starve them."""
+        if not self.preempted:
+            return
+        ready = [p for p in self.preempted if p.not_before_tick <= self.tick]
+        if not ready:
+            return
+        self.preempted = [p for p in self.preempted
+                          if p.not_before_tick > self.tick]
+        for p in sorted(ready, key=lambda p: p.request.rid, reverse=True):
+            self.pending.insert(0, p.request)
+
+    # ------------------------------------------------------------------
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
@@ -513,9 +906,16 @@ class ServeEngine:
         self.cache["pos"] = pos
 
     def step(self) -> int:
-        """One engine tick: admit + decode one token for all active slots."""
+        """One engine tick: shed expired, re-admit parked evictions,
+        admit, secure grants, decode one token for all active slots."""
+        t0 = time.perf_counter()
+        self.tick += 1
+        self._shed_expired_pending()
+        self._readmit_preempted()
         self._admit()
+        self._ensure_grants()
         if not self.active:
+            self._observe_tick(t0)
             return 0
         # per-slot positions: every slot decodes at its own offset.  Freed
         # slots are masked to (token 0, pos 0): their decode is a bounded
@@ -540,7 +940,15 @@ class ServeEngine:
                 self.finished.append(r)
                 del self.active[slot]
                 self._release_slot(slot, r)
+                self._backoff.pop(r.rid, None)
+        self._observe_tick(t0)
         return len(finished)
+
+    def _observe_tick(self, t0: float) -> None:
+        dt = time.perf_counter() - t0
+        if self.tick_timer.is_straggler(dt):
+            self.straggler_ticks += 1
+        self.tick_timer.observe(dt)
 
     def _release_slot(self, slot: int, r: Request) -> None:
         """Return the slot — and, when paged, its blocks — to the pool.
@@ -559,8 +967,23 @@ class ServeEngine:
                 self.cache["block_tbl"].at[slot].set(-1)
 
     def run_until_idle(self, max_ticks: int = 1000) -> List[Request]:
+        """Tick until no live work remains (parked evictions count as
+        live — their backoff just hasn't expired).  Raises a loud
+        :class:`TimeoutError` naming the stuck request ids when work
+        remains after ``max_ticks``: a deadlocked admission loop must
+        not be indistinguishable from success."""
         ticks = 0
-        while (self.pending or self.active) and ticks < max_ticks:
+        while self.pending or self.active or self.preempted:
+            if ticks >= max_ticks:
+                stuck = sorted(
+                    [r.rid for r in self.pending]
+                    + [r.rid for r in self.active.values()]
+                    + [p.request.rid for p in self.preempted])
+                raise TimeoutError(
+                    f"run_until_idle: {len(stuck)} request(s) still live "
+                    f"after {max_ticks} ticks (pending={len(self.pending)} "
+                    f"active={len(self.active)} "
+                    f"preempted={len(self.preempted)}): rids {stuck}")
             self.step()
             ticks += 1
         return self.finished

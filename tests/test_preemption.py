@@ -1,0 +1,318 @@
+"""Victim preemption, grow-on-demand grants, and overload degradation.
+
+The robustness contract this file pins: exhaustion of the paged block
+pool is a *handled* condition.  A mid-decode grant failure walks the
+grant → migrate → preempt ladder; an evicted request is re-admitted by
+re-prefilling prompt+generated and must emit **exactly** the tokens of
+an uninterrupted run (greedy argmax; the re-prefill rebuilds the same
+KV rows, so the decode picks up bit-where it left off).  Past the retry
+budget or a missed deadline the request is shed with ``Request.error``
+set; past the preemption-rate threshold ``submit()`` raises the typed
+:class:`OverloadError` instead of hanging the queue.  The acceptance
+matrix runs the eviction + re-prefill cycle across the attention, SSM,
+and hybrid architectures — preemption must round-trip *every* per-slot
+state the template holds (KV blocks, SSM state, conv tail), not just
+the attention cache.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import lm
+from repro.models.lm import RunCfg
+from repro.serve.engine import (OverloadError, PreemptionPolicy, Request,
+                                ServeEngine)
+
+CFG = RunCfg(block_q=16, ssd_chunk=16)
+
+ARCHS = ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"]
+
+_PARAMS_CACHE: dict = {}
+
+
+def _arch_params(name):
+    if name not in _PARAMS_CACHE:
+        arch = get_arch(name).reduced()
+        _PARAMS_CACHE[name] = (arch, lm.init_params(arch,
+                                                    jax.random.PRNGKey(0)))
+    return _PARAMS_CACHE[name]
+
+
+def _prompts(arch):
+    return [np.arange(5, dtype=np.int32) % arch.vocab_size,
+            (np.arange(11, dtype=np.int32) * 3) % arch.vocab_size,
+            (np.arange(8, dtype=np.int32) * 7 + 2) % arch.vocab_size]
+
+
+def _oracle(arch, params, prompts, new):
+    out = []
+    for p in prompts:
+        eng = ServeEngine(arch, params, CFG, max_batch=1, max_len=32)
+        eng.submit(p, max_new_tokens=new)
+        out.append(eng.run_until_idle(max_ticks=64)[0].out_tokens)
+    return out
+
+
+# ---------------- acceptance matrix: eviction + re-prefill ------------
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_preemption_token_identity_per_arch(name):
+    """>=1 forced eviction + re-prefill per arch: every finished request
+    is token-identical to the uninterrupted sequential oracle, and the
+    pool drains whole.  Paged grant-mode engines for attention archs
+    (the autonomous ladder exists there); the SSM-only arch is evicted
+    through the public hook — its per-slot recurrent state is exactly
+    what re-prefill must reconstruct."""
+    arch, params = _arch_params(name)
+    prompts = _prompts(arch)
+    want = _oracle(arch, params, prompts, 6)
+
+    kw = {}
+    if arch.has_attention:
+        kw = dict(kv_residency="paged", kv_block_len=8, kv_n_blocks=4,
+                  kv_admission="grant")
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                      preemption=PreemptionPolicy(max_preemptions=16,
+                                                  backoff_base_ticks=1),
+                      **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    forced = 0
+    ticks = 0
+    while (eng.pending or eng.active or eng.preempted) and ticks < 400:
+        if eng.active and ticks in (2, 9):
+            # evict whoever has made the most progress — the hardest
+            # re-prefill (longest retained generation)
+            victim = max(eng.active.values(),
+                         key=lambda r: len(r.out_tokens))
+            eng.preempt(victim.rid)
+            forced += 1
+        eng.step()
+        ticks += 1
+    assert forced >= 1 and eng.preemptions >= forced
+    assert not (eng.pending or eng.active or eng.preempted)
+    assert not eng.shed, [r.error for r in eng.shed]
+    got = {r.prompt.tobytes(): r.out_tokens for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w, (name, got[p.tobytes()], w)
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"], "blocks leaked"
+    for r in eng.finished:
+        assert not r.blocks
+
+
+def test_natural_exhaustion_preempts_and_recovers():
+    """A pool too small for concurrent growth: the engine preempts on
+    its own (no injected faults), and the outcome is still
+    token-identical with zero leaks."""
+    arch, params = _arch_params("qwen3-8b")
+    prompts = _prompts(arch)
+    want = _oracle(arch, params, prompts, 6)
+    # 3 blocks of 8 rows: the 11-token prompt alone peaks at 3 blocks,
+    # so two concurrent requests MUST collide mid-decode
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=3,
+                      kv_admission="grant",
+                      preemption=PreemptionPolicy(max_preemptions=8,
+                                                  backoff_base_ticks=1))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_idle(max_ticks=400)
+    assert eng.preemptions >= 1, "tight pool never forced an eviction"
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w
+    assert eng.block_stats()["free"] == 3
+
+
+def test_preempted_request_state_is_host_side():
+    """While parked, an evicted request holds no slot, no blocks, and
+    its generated tokens — the whole resumption state is the host-side
+    token list."""
+    arch, params = _arch_params("qwen3-8b")
+    eng = ServeEngine(arch, params, CFG, max_batch=1, max_len=32,
+                      kv_residency="paged", kv_block_len=8,
+                      kv_admission="grant",
+                      preemption=PreemptionPolicy(backoff_base_ticks=8))
+    rid = eng.submit(_prompts(arch)[0], max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    tokens_so_far = list(eng.active[0].out_tokens)
+    eng.preempt(rid)
+    assert len(eng.preempted) == 1
+    parked = eng.preempted[0]
+    assert parked.request.rid == rid
+    assert parked.request.slot == -1 and not parked.request.blocks
+    assert parked.request.out_tokens == tokens_so_far
+    assert parked.not_before_tick > eng.tick, "backoff must delay re-entry"
+    # feed = prompt + generated[:-1]; the last token is the next decode's
+    # input, not a KV row to rebuild
+    assert len(parked.request.feed_tokens) \
+        == len(parked.request.prompt) + len(tokens_so_far) - 1
+    assert eng.block_stats()["free"] == eng.block_stats()["total"]
+
+
+# ---------------- migration (sub-pool rebalancing) --------------------
+
+def test_migration_rebalances_to_idle_sub_pool():
+    """Two same-length requests land in one sub-pool; when it drains,
+    one slot migrates — blocks, table row, per-slot state — to the
+    idling donor sub-pool instead of evicting anyone, and the
+    slot→sub-pool contract holds on every tick."""
+    arch, params = _arch_params("qwen3-8b")
+    p1 = (np.arange(8, dtype=np.int32) * 7 + 2) % arch.vocab_size
+    p2 = (np.arange(8, dtype=np.int32) * 3 + 1) % arch.vocab_size
+    want = _oracle(arch, params, [p1, p2], 9)
+    # 2 sub-pools x 3 blocks; slots {0,1}->g0, {2,3}->g1.  Both prompts
+    # bucket into one admission (same length) and grab g0's slots; both
+    # cross a block boundary on the first decode tick, and g0 has one
+    # spare block for two askers.
+    eng = ServeEngine(arch, params, CFG, max_batch=4, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=6,
+                      kv_admission="grant", kv_pool_groups=2,
+                      preemption=PreemptionPolicy(max_preemptions=8))
+    eng.submit(p1, max_new_tokens=9)
+    eng.submit(p2, max_new_tokens=9)
+    while eng.pending or eng.active or eng.preempted:
+        eng.step()
+        for slot, r in eng.active.items():
+            g = eng._slot_group(slot)
+            assert all(eng._alloc.group_of(b) == g for b in r.blocks), \
+                "migrated slot holds foreign blocks"
+        assert eng.tick < 200, "stuck"
+    assert eng.migrations >= 1, "hot/idle split never migrated"
+    assert eng.preemptions == 0, "migration should have avoided eviction"
+    got = {r.prompt.tobytes(): r.out_tokens for r in eng.finished}
+    assert got[p1.tobytes()] == want[0] and got[p2.tobytes()] == want[1]
+    assert eng.block_stats()["free"] == 6
+
+
+def test_kv_pool_groups_validation():
+    arch, params = _arch_params("qwen3-8b")
+    with pytest.raises(ValueError, match="kv_pool_groups"):
+        ServeEngine(arch, params, CFG, max_batch=3, max_len=32,
+                    kv_residency="paged", kv_block_len=8, kv_n_blocks=6,
+                    kv_pool_groups=2)
+    with pytest.raises(ValueError, match="kv_admission"):
+        ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                    kv_admission="lazy")
+
+
+# ---------------- overload: shed, don't hang --------------------------
+
+def test_overload_sheds_with_typed_error():
+    """Sustained demand past the pool's thrash point trips the
+    preemption-rate threshold: submit() raises OverloadError, already-
+    doomed requests are shed with errors (holding nothing), and the
+    engine still drains clean instead of hanging."""
+    arch, params = _arch_params("qwen3-8b")
+    p5 = np.arange(5, dtype=np.int32) % arch.vocab_size
+    pol = PreemptionPolicy(max_preemptions=2, backoff_base_ticks=1,
+                           shed_window_ticks=8, shed_rate=0.25)
+    eng = ServeEngine(arch, params, CFG, max_batch=4, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=3,
+                      kv_admission="grant", preemption=pol)
+    with pytest.raises(OverloadError, match="shedding load"):
+        for _ in range(60):
+            eng.submit(p5, max_new_tokens=12)
+            eng.step()
+    assert eng.overloaded()
+    eng.run_until_idle(max_ticks=600)       # must NOT hang or raise
+    assert eng.shed, "thrashing load should shed someone"
+    for r in eng.shed:
+        assert r.error and not r.blocks and not r.done
+    assert eng.finished, "overload must degrade, not stop all service"
+    assert eng.block_stats()["free"] == eng.block_stats()["total"]
+    assert eng.pressure_stats()["preemptions"] == eng.preemptions > 0
+
+
+def test_deadline_sheds_pending_and_spares_victims():
+    arch, params = _arch_params("qwen3-8b")
+    p = _prompts(arch)[0]
+    eng = ServeEngine(arch, params, CFG, max_batch=1, max_len=32)
+    rid = eng.submit(p, max_new_tokens=4, deadline_s=-1.0)   # already late
+    ok = eng.submit(p, max_new_tokens=4)
+    eng.run_until_idle(max_ticks=32)
+    assert [r.rid for r in eng.shed] == [rid]
+    assert "deadline" in eng.shed[0].error
+    assert [r.rid for r in eng.finished] == [ok]
+    # victim selection: deadline'd requests are spared while any
+    # deadline-free candidate exists; among the deadline-free, fewest
+    # tokens generated goes first
+    import time
+    now = time.time()
+    a = Request(0, p, out_tokens=[1, 2, 3], deadline=now + 5)
+    b = Request(1, p, out_tokens=[1, 2])
+    c = Request(2, p, out_tokens=[1, 2, 3, 4])
+    pol = PreemptionPolicy()
+    assert pol.pick_victim([a, b, c], now) is b
+    assert pol.pick_victim([a, c], now) is c
+    # among deadline'd candidates: latest deadline evicts first
+    d = Request(3, p, out_tokens=[1, 2, 3], deadline=now + 50)
+    assert pol.pick_victim([a, d], now) is d
+
+
+def test_run_until_idle_raises_loud_timeout():
+    """Tick exhaustion with live work names the stuck rids — a
+    deadlocked admission loop must not look like success."""
+    arch, params = _arch_params("qwen3-8b")
+    eng = ServeEngine(arch, params, CFG, max_batch=1, max_len=64)
+    rid = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=40)
+    with pytest.raises(TimeoutError, match=f"rids \\[{rid}\\]"):
+        eng.run_until_idle(max_ticks=3)
+
+
+# ---------------- the plan is the deployment contract -----------------
+
+def test_plan_records_admission_mode_and_headroom():
+    """Single-host worst-case pools reserve; data-sharded reclamation-
+    bet pools grant — recorded in the plan estimates with a decision-log
+    entry, surfaced by `plan show`, and honored by from_plan (with an
+    explicit override as the ops escape hatch)."""
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    from repro.launch.plan import _DECISION_KEYS
+
+    arch = get_arch("qwen3-8b").reduced()
+    plan = specialize(arch, ShapeConfig("pre_r", "decode", 32, 2),
+                      mesh_axes=("data", "model"), mesh_shape=(1, 1))
+    assert plan.estimates["kv_admission"] == "reserve"
+    assert plan.estimates["kv_preempt_headroom"] >= 0
+    assert any(s == "kv_admission" for _, s, _, _ in plan.log)
+    assert "kv_admission" in _DECISION_KEYS
+    assert "kv_preempt_headroom" in _DECISION_KEYS
+
+    gplan = specialize(arch, ShapeConfig("pre_g", "decode", 256, 8),
+                       mesh_axes=("data", "model"), mesh_shape=(2, 2))
+    assert gplan.estimates["kv_admission"] == "grant"
+    why = [w for _, s, _, w in gplan.log if s == "kv_admission"][-1]
+    assert "reclamation" in why
+
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+    eng = ServeEngine.from_plan(plan, params, arch=arch)
+    assert eng.kv_admission == "reserve"
+    eng = ServeEngine.from_plan(plan, params, arch=arch,
+                                kv_admission="grant")
+    assert eng.kv_admission == "grant"
+
+
+def test_reserve_mode_never_walks_the_ladder():
+    """Reserve admission (the plan default on worst-case pools) must
+    keep PR-4/5 behavior bit-for-bit: full budget up front, no grants,
+    no preemptions, serialization on exhaustion."""
+    arch, params = _arch_params("qwen3-8b")
+    prompts = _prompts(arch)
+    eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                      kv_residency="paged", kv_block_len=16)
+    assert eng.kv_admission == "reserve"
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_idle(max_ticks=64)
+    assert len(done) == 3
+    assert eng.preemptions == 0 and eng.migrations == 0
+    assert eng.grant_denials == 0
+    assert not eng.shed and not eng.preempted

@@ -47,19 +47,26 @@ POOL_GEOMETRIES = [(8, 1), (24, 1), (16, 2), (32, 4), (64, 8)]
 
 
 def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
-    """Drive one admit/finish sequence, asserting every invariant the
-    serving engine relies on after each step.
+    """Drive one admit/grant/finish sequence, asserting every invariant
+    the serving engine relies on after each step.
 
-    ``ops`` yields (kind, group, need) tuples; kind < 0.6 admits, else
-    finishes a random live holder.  Returns the live set for the
-    caller's drain check.
+    ``ops`` yields (kind, group, need, pick) tuples; kind < 0.45 admits
+    a multi-block budget, kind < 0.6 is a one-block grow-on-demand
+    grant appended to a random live holder, else a random live holder
+    finishes.  Returns the live set for the caller's drain check.
+
+    The ``owned`` model set encodes *no grant after free* directly:
+    every released block leaves the model, so a grant handing out a
+    block some holder still (in the model) owns — i.e. a block that was
+    freed out from under it — trips the double-assignment assert.
     """
     alloc = BlockAllocator(n_blocks, groups)
     sub = n_blocks // groups
     live = []                     # allocations currently held
     owned = set()                 # model of every handed-out block
+    water = [alloc.low_water(g) for g in range(groups)]
     for kind, group, need, pick in ops:
-        if kind < 0.6 or not live:
+        if kind < 0.45 or not live:
             got = alloc.allocate(need, group)
             if got is None:
                 # exhaustion is exact: refusal iff the sub-pool cannot
@@ -72,6 +79,16 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
                     "allocation crossed a sub-pool boundary"
                 owned |= set(got)
                 live.append(got)
+        elif kind < 0.6:
+            # grow-on-demand: one-block grant onto a live holder
+            blk = alloc.allocate_one(group)
+            if blk is None:
+                assert alloc.free_in(group) == 0
+            else:
+                assert blk not in owned, "granted a freed/held block"
+                assert blk // sub == group
+                owned.add(blk)
+                live[pick % len(live)].append(blk)
         else:
             got = live.pop(pick % len(live))
             alloc.release(got)
@@ -82,6 +99,11 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
             "blocks not conserved"
         assert stats["in_use"] == len(owned)
         assert sum(alloc.free_in(g) for g in range(groups)) == stats["free"]
+        for g in range(groups):
+            # watermarks only ever ratchet down, and never sit above
+            # the current free count (they are the historical minimum)
+            assert alloc.low_water(g) <= min(water[g], alloc.free_in(g))
+            water[g] = alloc.low_water(g)
     return alloc, live, owned
 
 
@@ -131,6 +153,40 @@ def test_block_allocator_matches_engine_block_stats_contract():
     assert alloc.stats()["free"] == 16
 
 
+def test_block_allocator_no_grant_after_free():
+    """A released block sits in its free list until re-allocated — it
+    is never still reachable through its previous holder.  Draining the
+    sub-pool after a release must hand every id out exactly once."""
+    alloc = BlockAllocator(8, 2)
+    held = alloc.allocate(3, 0)
+    freed = held.pop(1)
+    alloc.release([freed])
+    drained = []
+    while True:
+        blk = alloc.allocate_one(0)
+        if blk is None:
+            break
+        drained.append(blk)
+    # the freed block came back exactly once; the still-held ones never
+    assert drained.count(freed) == 1
+    assert not (set(drained) & set(held))
+    assert sorted(drained + held) == list(range(4))   # group 0 = ids [0,4)
+    assert alloc.free_in(0) == 0 and alloc.low_water(0) == 0
+
+
+def test_block_allocator_low_water_tracks_minimum():
+    alloc = BlockAllocator(8, 1)
+    assert alloc.low_water() == 8
+    a = alloc.allocate(5)
+    assert alloc.low_water() == 3
+    alloc.release(a)
+    assert alloc.low_water() == 3, "watermark must survive the refill"
+    b = alloc.allocate(7)
+    assert alloc.low_water() == 1
+    alloc.release(b)
+    assert alloc.stats()["free"] == 8
+
+
 if HAVE_HYPOTHESIS:
     @given(st.sampled_from(POOL_GEOMETRIES),
            st.lists(st.tuples(st.floats(0, 1), st.integers(0, 7),
@@ -145,6 +201,83 @@ if HAVE_HYPOTHESIS:
         for got in live:
             alloc.release(got)
         assert alloc.stats()["free"] == n_blocks
+
+
+# =====================================================================
+# serving-engine churn fuzz: grow-on-demand grants, victim preemption,
+# sub-pool migration, and shedding under a seeded chaotic workload —
+# the engine-level invariants the allocator fuzz cannot see (token
+# identity across evictions, the slot→sub-pool contract through
+# migration, shed requests never holding blocks)
+# =====================================================================
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_churn_fuzz_grant_preempt_migrate(seed):
+    """Grant-mode engine on a deliberately tight 2-sub-pool geometry,
+    with injected grant denials AND random forced evictions: every
+    request that finishes must be token-identical to its uninterrupted
+    single-request run, every tick must conserve blocks and respect the
+    slot→sub-pool contract, parked/shed requests must hold nothing, and
+    the drained pool must be whole."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import lm
+    from repro.models.lm import RunCfg
+    from repro.serve.engine import PreemptionPolicy, ServeEngine
+
+    cfg = RunCfg(block_q=16, ssd_chunk=16)
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    rng = random.Random(seed)
+    prompts = [np.asarray([(i * 7 + j * 3 + 1) % arch.vocab_size
+                           for j in range(plen)], np.int32)
+               for i, plen in enumerate([5, 8, 11, 8, 5][:5])]
+    new = 8
+    want = []
+    for p in prompts:
+        e = ServeEngine(arch, params, cfg, max_batch=1, max_len=32)
+        e.submit(p, max_new_tokens=new)
+        want.append(e.run_until_idle(max_ticks=64)[0].out_tokens)
+
+    eng = ServeEngine(arch, params, cfg, max_batch=4, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=8,
+                      kv_admission="grant", kv_pool_groups=2,
+                      preemption=PreemptionPolicy(max_preemptions=30,
+                                                  backoff_base_ticks=1,
+                                                  backoff_cap_ticks=4))
+    eng.grant_fault = lambda: rng.random() < 0.2
+    for p in prompts:
+        eng.submit(p, max_new_tokens=new)
+    ticks = 0
+    while (eng.pending or eng.active or eng.preempted) and ticks < 600:
+        if eng.active and (ticks == 3 or rng.random() < 0.05):
+            # tick 3 guarantees >= 1 mid-decode eviction + re-prefill
+            # even when migration absorbs every injected denial
+            eng.preempt(rng.choice(list(eng.active.values())).rid)
+        eng.step()
+        ticks += 1
+        stats = eng.block_stats()      # conservation asserts internally
+        held = [b for r in eng.active.values() for b in r.blocks]
+        assert len(held) == len(set(held)) == stats["in_use"], \
+            "a block is held by two slots (or leaked)"
+        for slot, r in eng.active.items():
+            g = eng._slot_group(slot)
+            assert all(eng._alloc.group_of(b) == g for b in r.blocks), \
+                "slot -> sub-pool contract violated"
+        for r in eng.shed:
+            assert not r.blocks and r.error, "shed request holds blocks"
+        for parked in eng.preempted:
+            assert not parked.request.blocks, "parked eviction holds blocks"
+    assert not (eng.pending or eng.active or eng.preempted), \
+        "fuzz run did not drain"
+    assert eng.preemptions >= 1, "churn never forced an eviction"
+    assert len(eng.finished) + len(eng.shed) == len(prompts)
+    got = {r.prompt.tobytes(): r.out_tokens for r in eng.finished}
+    for p, w in zip(prompts, want):
+        if p.tobytes() in got:
+            assert got[p.tobytes()] == w, \
+                "preempted request diverged from its uninterrupted run"
+    assert eng.block_stats()["free"] == 8, "blocks leaked"
 
 
 # =====================================================================
