@@ -16,6 +16,11 @@
 #                            # denials + simulated slow ticks) asserting
 #                            # zero token divergence and zero leaked
 #                            # blocks
+#   scripts/ci.sh --prefix   # prefix-reuse lane: seeded session traffic
+#                            # with an 80%-shared system prompt asserting
+#                            # >= 2x fewer prefill calls and pinned
+#                            # blocks vs the reuse-off oracle, zero
+#                            # divergence, zero leaked refcounts
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,6 +32,14 @@ if [[ "${1:-}" == "--chaos" ]]; then
     python scripts/serve_smoke.py --chaos --seed 0
     python scripts/serve_smoke.py --chaos --seed 1
     echo "CI OK (chaos)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--prefix" ]]; then
+    echo "== prefix lane: shared-system-prompt reuse vs private oracle (seeds 0, 1) =="
+    python scripts/serve_smoke.py --prefix --seed 0
+    python scripts/serve_smoke.py --prefix --seed 1
+    echo "CI OK (prefix)"
     exit 0
 fi
 

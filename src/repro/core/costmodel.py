@@ -228,6 +228,12 @@ class KVBlockGeometry:
     model_degree: int = 1          # model shards per sub-pool
     admission: str = "reserve"     # "reserve" (worst-case up front) | "grant"
     headroom_blocks: int = 0       # per-sub-pool free blocks past one max seq
+    prefix_reuse: str = "on"       # cross-request prefix KV sharing
+    # assumed shared-prefix fraction of serving traffic the reuse model
+    # is evaluated at (system prompts + session history dominate
+    # production feeds; 0.5 is the model's deliberately conservative
+    # default — the engine reports the *measured* rate at runtime)
+    assumed_hit_rate: float = 0.5
 
     @property
     def table_cols(self) -> int:
@@ -239,6 +245,33 @@ class KVBlockGeometry:
         the block dim is split data-major into ``data_degree`` sub-pools,
         each serving the batch slots that data shard hosts)."""
         return self.n_blocks // max(1, self.data_degree)
+
+    def prefix_capacity_factor(self, residents: int,
+                               hit_rate: Optional[float] = None) -> float:
+        """Effective capacity multiplier of prefix sharing: with
+        ``residents`` concurrent sequences each sharing a ``hit_rate``
+        fraction of their blocks, the shared run is pinned once instead
+        of ``residents`` times — ``r / (h + r*(1-h))``, approaching
+        ``1/(1-h)`` as residency grows.  1.0 when reuse is off."""
+        if self.prefix_reuse != "on" or residents <= 1:
+            return 1.0
+        h = self.assumed_hit_rate if hit_rate is None else hit_rate
+        h = min(max(h, 0.0), 1.0)
+        return residents / (h + residents * (1.0 - h))
+
+    def prefix_hit_headroom(self, residents: int,
+                            hit_rate: Optional[float] = None) -> int:
+        """Expected per-sub-pool blocks *freed* by sharing at the
+        assumed hit rate: every resident past the first aliases the
+        shared-prefix blocks instead of pinning private copies —
+        ``(residents - 1) * floor(h * blocks_per_seq)``, capped at the
+        sub-pool.  This is headroom the admission ladder gets back
+        before it ever migrates or preempts."""
+        if self.prefix_reuse != "on" or residents <= 1:
+            return 0
+        h = self.assumed_hit_rate if hit_rate is None else hit_rate
+        shared = int(min(max(h, 0.0), 1.0) * self.blocks_per_seq)
+        return min((residents - 1) * shared, self.sub_pool_blocks)
 
 
 def kv_block_len(seq_len: int, min_block: int = 16,

@@ -241,6 +241,22 @@ class DataOrganizationPass(Pass):
         plan.estimates["kv_pool_model_degree"] = geo.model_degree
         plan.estimates["kv_admission"] = geo.admission
         plan.estimates["kv_preempt_headroom"] = geo.headroom_blocks
+        # cross-request prefix reuse rides on the paged pool: record it
+        # plus the expected-hit-rate headroom so from_plan engines and
+        # the decision log carry the data-level-reuse bet explicitly
+        residents = max(1, shape.global_batch // dsize)
+        reuse_headroom = geo.prefix_hit_headroom(residents)
+        plan.estimates["kv_prefix_reuse"] = geo.prefix_reuse
+        plan.estimates["kv_prefix_hit_headroom"] = reuse_headroom
+        self.record(
+            ctx, "kv_prefix_reuse", geo.prefix_reuse,
+            f"full prompt-prefix blocks are content-hashed and aliased "
+            f"across requests (refcounted, CoW on divergence): at the "
+            f"assumed {geo.assumed_hit_rate:.0%} shared-prefix rate, "
+            f"{residents} resident seq(s)/sub-pool pin "
+            f"~{reuse_headroom} fewer block(s) "
+            f"(capacity x{geo.prefix_capacity_factor(residents):.2f}) "
+            "and matched tokens skip prefill compute entirely")
         if geo.admission == "grant":
             self.record(
                 ctx, "kv_admission", "grant",

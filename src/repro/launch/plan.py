@@ -58,6 +58,7 @@ def _load(store: planstore.PlanStore, path: Path) -> FrozenPlan:
 
 _DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
                   "kv_n_blocks", "kv_admission", "kv_preempt_headroom",
+                  "kv_prefix_reuse", "kv_prefix_hit_headroom",
                   "moe_impl", "grad_compression")
 
 

@@ -118,6 +118,56 @@ def attention_chunked(
     return out[:, :S]
 
 
+def attention_tail(
+    q: jax.Array,              # (B, T, H, hd) — post-RoPE tail queries
+    k: jax.Array,              # (B, M+T, K, hd) prefix ++ tail keys
+    v: jax.Array,              # (B, M+T, K, hd)
+    *,
+    q_positions: jax.Array,    # (B, T) absolute positions of the tail
+    k_positions: jax.Array,    # (B, M+T) absolute positions of all keys
+    causal: bool,
+    window=0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Chunked attention for a *tail* of queries over a longer key
+    stream (prefix-cache prefill: the leading M keys come from resident
+    pool blocks whose compute is being skipped).
+
+    Deliberately mirrors :func:`attention_chunked` op-for-op — same
+    ``gqa_scores`` einsum, same fp32 full-row softmax, same
+    ``gqa_context`` contraction over the full key axis — so the tail
+    positions' outputs are bitwise what a full-sequence prefill would
+    have produced for them (token-identity across aliased vs private
+    runs leans on this).
+    """
+    B, T, H, hd = q.shape
+    scale = hd ** -0.5
+    bq = min(block_q, T)
+    n_blocks = -(-T // bq)
+    pad = n_blocks * bq - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qpos_full = q_positions
+    if pad:
+        qpos_full = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                            constant_values=-1)
+    q_blocks = q.reshape(B, n_blocks, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    qpos_blocks = qpos_full.reshape(B, n_blocks, bq).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one_block(qb, qpb):
+        s = gqa_scores(qb * scale, k)                     # (B,K,G,bq,M+T)
+        m = _mask(qpb, k_positions, causal, window)       # (B,bq,M+T)
+        m = m & (qpb >= 0)[..., :, None]
+        s = jnp.where(m[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return gqa_context(p, v).astype(q.dtype)          # (B,bq,H,hd)
+
+    out = jax.lax.map(lambda xs: one_block(*xs), (q_blocks, qpos_blocks))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * bq, H, hd)
+    return out[:, :T]
+
+
 def attention_decode(
     q: jax.Array,              # (B, 1, H, hd) — post-RoPE
     k_cache: jax.Array,        # (B, S, K, hd)

@@ -837,6 +837,94 @@ def prefill(arch: ArchConfig, params, batch, cfg: RunCfg, max_len: int = 0):
     return logits[:, 0], cache
 
 
+def prefill_tail(arch: ArchConfig, params, batch, cfg: RunCfg,
+                 prefix_k: jax.Array, prefix_v: jax.Array):
+    """Prefill only the unmatched *tail* of a prompt whose leading rows
+    already sit in resident pool blocks (cross-request prefix reuse).
+
+    ``batch["tokens"]`` is ``(B, T)`` tail tokens; ``prefix_k`` /
+    ``prefix_v`` are ``(L, B, M, K, hd)`` — the matched prefix rows
+    gathered from the pool (already post-RoPE at absolute positions
+    ``[0, M)``, exactly as the donor's prefill wrote them).  The tail is
+    embedded at absolute positions ``M + [0, T)`` and each layer attends
+    over prefix-plus-tail keys through :func:`repro.models.attention
+    .attention_tail`, whose op structure matches the full-prefill
+    attention bit-for-bit on the tail positions — the token-identity
+    contract aliased admission leans on.
+
+    Returns ``(last-token logits (B, V), tail_k, tail_v)`` with tail
+    K/V stacked ``(L, B, T, K, hd)`` for the caller to scatter into its
+    freshly allocated blocks.  Attention-only architectures: an SSM
+    path's state at position M depends on every earlier token, so a
+    hybrid cannot skip the prefix compute (the engine runs those
+    through the full prefill and aliases blocks without skipping).
+    """
+    if arch.has_ssm:
+        raise ValueError(
+            f"prefill_tail cannot skip prefix compute for {arch.name}: "
+            "SSM state at the split point depends on the whole prefix")
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    M = prefix_k.shape[2]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    q_pos = jnp.broadcast_to(M + jnp.arange(T, dtype=jnp.int32), (B, T))
+    k_pos = jnp.broadcast_to(jnp.arange(M + T, dtype=jnp.int32), (B, M + T))
+    positions = q_pos
+    if arch.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, B, T))
+    windows = _window_schedule(arch)
+    g = arch.moe_interleave if arch.is_moe and arch.moe_interleave > 1 else 1
+    Lg = arch.n_layers // g
+
+    def layer(x, grp, w, pk, pv):
+        h = rms_norm(x, grp["pre_norm"], arch.norm_eps)
+        ap = AttnParams(grp["attn"]["wq"], grp["attn"]["wk"],
+                        grp["attn"]["wv"], grp["attn"]["wo"],
+                        grp["attn"].get("q_norm"), grp["attn"].get("k_norm"))
+        Hq = ap.wq.shape[-1] // arch.hd
+        q, k, v = attn_mod.project_qkv(
+            h, ap, Hq, ap.wk.shape[-1] // arch.hd, arch.hd, positions,
+            arch.rope_theta, arch.mrope_sections, arch.norm_eps)
+        if cfg.shard_heads:
+            q = _hint(q, cfg, None, None, cfg.model_axis, None)
+            kv_spec = cfg.model_axis if cfg.kv_heads_sharded else "rep"
+            k = _hint(k, cfg, None, None, kv_spec, None)
+            v = _hint(v, cfg, None, None, kv_spec, None)
+        k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        ctx = attn_mod.attention_tail(
+            q, k_full, v_full, q_positions=q_pos, k_positions=k_pos,
+            causal=arch.causal, window=w, block_q=cfg.block_q)
+        x = x + ctx.reshape(B, T, -1) @ ap.wo
+        if "mlp" in grp or "moe" in grp:
+            x, _ = _ffn_fwd(arch, cfg, grp, x)
+        return x, k, v
+
+    pk_xs = prefix_k.reshape(Lg, g, *prefix_k.shape[1:]) if g > 1 \
+        else prefix_k
+    pv_xs = prefix_v.reshape(Lg, g, *prefix_v.shape[1:]) if g > 1 \
+        else prefix_v
+
+    def body(x, xs):
+        grp, w, pk, pv = xs
+        if g > 1:
+            x, k0, v0 = layer(x, grp["dense"], w[0], pk[0], pv[0])
+            x, k1, v1 = layer(x, grp["moe"], w[1], pk[1], pv[1])
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+        x, k, v = layer(x, grp, w, pk, pv)
+        return x, (k, v)
+
+    w_xs = windows.reshape(Lg, g) if g > 1 else windows
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], w_xs, pk_xs, pv_xs))
+    x = rms_norm(x, params["final_norm"], arch.norm_eps)
+    logits = _logits(arch, params, x[:, -1:], cfg)
+    L = arch.n_layers
+    tail_k = ks.reshape(L, B, T, -1, arch.hd)
+    tail_v = vs.reshape(L, B, T, -1, arch.hd)
+    return logits[:, 0], tail_k, tail_v
+
+
 def _ssm_prefill(h, sp, arch, cfg):
     """SSD forward that also returns the final (ssm, conv) states."""
     dims = _ssm_dims(arch, sp)

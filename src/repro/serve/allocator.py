@@ -1,4 +1,5 @@
-"""Block-pool allocator for the paged KV cache — sub-pool aware.
+"""Block-pool allocator for the paged KV cache — sub-pool aware,
+refcounted for cross-request block sharing.
 
 The serving engine's residency management for a paged plan is exactly
 this object: blocks are handed out on admission (or granted one at a
@@ -12,6 +13,15 @@ combine.  The allocator enforces that contract structurally: every
 ``allocate`` draws from one group's free list, and ``release`` returns
 each block to the group its id belongs to.
 
+Prefix sharing (cross-request KV reuse) adds **per-block refcounts**:
+``allocate`` hands out blocks at count 1, ``retain`` bumps the count
+when another request aliases a block into its table (a prefix-cache
+hit), and ``release`` only returns a block to its sub-pool's free list
+when the count reaches zero.  Conservation is counted over *unique*
+resident blocks — a block aliased by five requests pins one block, not
+five; ``stats()["shared"]`` reports how many resident blocks currently
+have more than one holder.
+
 Grow-on-demand support (the grant admission mode): free lists are
 :class:`collections.deque` (O(1) grants at any pool size — ``pop(0)``
 on a list is O(n) and showed up at production pool sizes), and each
@@ -20,15 +30,21 @@ reached) so the engine's rebalancer can tell a persistently hot
 sub-pool from a transient dip without keeping its own history.
 
 Invariants (the property suite in ``tests/test_properties.py`` fuzzes
-these over random admit/grant/finish/churn sequences):
+these over random admit/grant/retain/finish/churn sequences):
 
-* conservation — ``free + in_use == n_blocks`` at every point
-  (``stats()`` re-asserts this on every call);
-* no double-assignment — a block is owned by at most one holder;
+* conservation — ``free + in_use == n_blocks`` at every point, where
+  ``in_use`` counts unique resident blocks regardless of how many
+  holders share them (``stats()`` re-asserts this on every call);
+* no double-assignment — a block is *allocated* to at most one holder;
+  additional holders arrive only through an explicit ``retain``;
 * group integrity — allocations never cross a sub-pool boundary;
-* no leaks — releasing everything restores ``free == n_blocks``;
+* no leaks — releasing every holder's reference restores
+  ``free == n_blocks``;
 * no grant after free — a released block sits in its free list until
-  re-allocated; it is never still owned by its previous holder.
+  re-allocated; it is never still owned by its previous holder;
+* refcount sanity — resident blocks have count >= 1, freeing past
+  zero (double free) raises, and ``release([])`` is an explicit no-op
+  that never touches low-water bookkeeping.
 """
 
 from __future__ import annotations
@@ -60,6 +76,9 @@ class BlockAllocator:
             deque(range(g * self.group_size, (g + 1) * self.group_size))
             for g in range(groups)]
         self._owned: set = set()
+        # per-block holder counts for resident blocks (absent == free);
+        # 1 = private, >1 = aliased by multiple block tables
+        self._ref: Dict[int, int] = {}
         # per-sub-pool pressure telemetry: smallest free count ever seen
         # (the rebalancer's "hot sub-pool" signal) and grant counters
         self._low_water: List[int] = [self.group_size] * groups
@@ -89,7 +108,7 @@ class BlockAllocator:
         """``need`` blocks from one sub-pool, or None if it cannot cover
         them (callers treat None as "wait for a finisher" or "preempt a
         victim" — partial grants would deadlock two half-admitted
-        requests)."""
+        requests).  Fresh blocks start at refcount 1."""
         if need < 0:
             raise ValueError(f"need must be >= 0, got {need}")
         free = self._free[group]
@@ -97,6 +116,8 @@ class BlockAllocator:
             return None
         blocks = [free.popleft() for _ in range(need)]
         self._owned.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         self.grants += 1
         if len(free) < self._low_water[group]:
             self._low_water[group] = len(free)
@@ -108,25 +129,77 @@ class BlockAllocator:
         got = self.allocate(1, group)
         return got[0] if got is not None else None
 
-    def release(self, blocks: Sequence[int]) -> None:
-        """Return blocks to their sub-pools (double frees are loud —
-        a silent one would let two slots share a block)."""
+    def retain(self, blocks: Sequence[int]) -> None:
+        """Bump the holder count of resident blocks — the prefix-cache
+        hit path: another request aliases these blocks into its table.
+        Retaining a block the pool does not currently hold is loud (the
+        aliased content would be whatever the next tenant writes)."""
+        for b in blocks:
+            if b not in self._owned:
+                raise ValueError(
+                    f"block {b} is not currently allocated — cannot retain "
+                    "a free (or never-owned) block; an alias to it would "
+                    "read the next tenant's rows")
+            self._ref[b] += 1
+
+    def refcount(self, block_id: int) -> int:
+        """Current holder count (0 = free).  Refcount > 1 means the
+        block is shared: writers must copy it first (CoW)."""
+        return self._ref.get(block_id, 0)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Resident blocks with more than one holder."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    def release(self, blocks: Sequence[int]) -> List[int]:
+        """Drop one holder reference per listed block; a block returns
+        to its sub-pool's free list only when its count reaches zero.
+        Returns the blocks actually freed (so the engine can prune
+        prefix-trie entries pointing at them).  Double frees stay loud —
+        a silent one would let two slots share a block they never agreed
+        to share.
+
+        An empty ``blocks`` sequence is an explicit no-op: a request
+        that sheds before any grant releases nothing, and that path must
+        not touch free lists or low-water bookkeeping (pinned by the
+        churn fuzz)."""
+        if not blocks:
+            # no-op by contract; re-assert conservation so a corrupted
+            # caller path fails here rather than at the next decode
+            assert self.free + len(self._owned) == self.n_blocks, (
+                f"block conservation violated on empty release: "
+                f"free={self.free} in_use={len(self._owned)} "
+                f"total={self.n_blocks}")
+            return []
+        freed: List[int] = []
         for b in blocks:
             if b not in self._owned:
                 raise ValueError(
                     f"block {b} is not currently allocated "
                     "(double free, or a block this pool never owned)")
-            self._owned.discard(b)
-            self._free[self.group_of(b)].append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._owned.discard(b)
+                self._free[self.group_of(b)].append(b)
+                freed.append(b)
+        return freed
 
     def stats(self) -> Dict[str, int]:
         free = self.free
         in_use = len(self._owned)
         # conservation is the invariant everything else leans on; a
         # broken free list must fail here, not as a downstream decode
-        # reading a double-assigned block
+        # reading a double-assigned block.  Sharing does not bend it:
+        # in_use counts unique resident blocks, however many holders.
         assert free + in_use == self.n_blocks, (
             f"block conservation violated: free={free} in_use={in_use} "
             f"total={self.n_blocks}")
+        assert all(c >= 1 for c in self._ref.values()), (
+            "resident block with refcount < 1")
+        assert set(self._ref) == self._owned, (
+            "refcount map out of sync with ownership set")
         return {"total": self.n_blocks, "free": free,
-                "in_use": in_use, "groups": self.groups}
+                "in_use": in_use, "shared": self.shared_blocks,
+                "groups": self.groups}

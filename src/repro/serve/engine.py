@@ -61,6 +61,25 @@ exactly the tokens of an uninterrupted run (the re-prefill rebuilds the
 same KV rows; the discarded prefill sample is the token the host
 already holds).
 
+Paged residency additionally enables **cross-request prefix reuse**
+(``kv_prefix_reuse``, a plan decision): every full ``block_len`` chunk
+of an admitted feed is chain-hashed (:mod:`repro.serve.prefix_cache`)
+and matched against a per-sub-pool radix trie of resident blocks.
+Matched blocks are *aliased* into the new request's table with a
+refcount bump (``BlockAllocator.retain``) instead of re-prefilled:
+attention-only archs skip the matched tokens' prefill compute entirely
+(a tail-only forward, :func:`repro.models.lm.prefill_tail`; a request
+whose whole feed-but-last is matched rides the decode path with zero
+prefill calls), while hybrid archs still prefill the full feed (their
+SSM states need every token) but share the matched blocks' capacity.
+Writers never mutate shared state: a copy-on-write barrier before each
+decode tick copies any shared append block into a freshly granted one
+(one jitted gather-scatter of k/v rows plus the table entry).  The
+degradation ladder is sharing-aware — migration refuses to move shared
+blocks and victim selection prefers requests pinning the fewest —
+and trie entries are pruned exactly when their blocks return to the
+free list.
+
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
 from the on-disk plan store in a different process) and derives the KV
@@ -88,6 +107,7 @@ from repro.models import lm
 from repro.models.lm import RunCfg
 from repro.runtime.fault import RestartPolicy
 from repro.runtime.straggler import StepTimer
+from repro.serve.prefix_cache import PrefixCache, chain_hashes
 
 
 class OverloadError(RuntimeError):
@@ -115,6 +135,9 @@ class Request:
     deadline: Optional[float] = None   # absolute wall-clock deadline
     preemptions: int = 0               # times evicted mid-decode
     error: str = ""                    # set when shed (never finished)
+    # chain hashes of the feed's full blocks at last (re-)admission —
+    # migration re-registers the moved blocks under these
+    prefix_hashes: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def feed_tokens(self) -> np.ndarray:
@@ -178,12 +201,16 @@ class ServeEngine:
                  ssm_heads: int = 0, kv_heads: int = 0, seed: int = 0,
                  kv_residency: str = "dense", kv_block_len: int = 0,
                  kv_n_blocks: int = 0, kv_admission: str = "reserve",
-                 kv_pool_groups: int = 0,
+                 kv_pool_groups: int = 0, kv_prefix_reuse: str = "on",
                  preemption: Optional[PreemptionPolicy] = None):
         if kv_admission not in ("reserve", "grant"):
             raise ValueError(
                 f"kv_admission must be 'reserve' or 'grant', "
                 f"got {kv_admission!r}")
+        if kv_prefix_reuse not in ("on", "off"):
+            raise ValueError(
+                f"kv_prefix_reuse must be 'on' or 'off', "
+                f"got {kv_prefix_reuse!r}")
         self.arch, self.params, self.cfg = arch, params, cfg
         self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
@@ -251,6 +278,11 @@ class ServeEngine:
                 arch, max_batch, max_len, self.block_len, self.n_blocks,
                 ssm_heads=ssm_heads, kv_heads=kv_heads)
             self._alloc = BlockAllocator(self.n_blocks, groups)
+            # cross-request prefix reuse: one trie per sub-pool (a match
+            # in a foreign sub-pool would break the combine contract)
+            self.kv_prefix_reuse = kv_prefix_reuse == "on"
+            self._prefix: Optional[PrefixCache] = (
+                PrefixCache(groups) if self.kv_prefix_reuse else None)
         else:
             from repro.serve.allocator import BlockAllocator
             self.block_len = 0
@@ -259,6 +291,14 @@ class ServeEngine:
             self.cache = lm.init_cache(arch, max_batch, max_len,
                                        ssm_heads=ssm_heads, kv_heads=kv_heads)
             self._alloc = BlockAllocator(0, 1)
+            self.kv_prefix_reuse = False
+            self._prefix = None
+        # matched tokens' prefill compute is only skippable when the
+        # whole per-token state is attention KV; an SSM/hybrid state
+        # depends on every prefix token, so those archs alias blocks
+        # (capacity sharing) but still prefill the full feed
+        self._skip_prefix = (self._prefix is not None
+                             and arch.has_attention and not arch.has_ssm)
         self.free_slots = list(range(max_batch))
         self.active: Dict[int, Request] = {}
         self.pending: List[Request] = []
@@ -291,11 +331,23 @@ class ServeEngine:
         # (bounded — long-running engines must not accumulate history)
         self.prefill_calls = 0
         self.prefill_batches: Deque[int] = deque(maxlen=1024)
+        # prefix-sharing telemetry (hit/miss counters live on _prefix)
+        self.cow_copies = 0
+        self.prefix_rides = 0          # admissions with zero prefill calls
 
         self._decode = jax.jit(
             lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(arch, p, b, cfg, max_len=max_len))
+        self._prefill_tail = jax.jit(
+            lambda p, b, pk, pv: lm.prefill_tail(arch, p, b, cfg, pk, pv))
+        # CoW: duplicate one pool block's k/v rows and repoint one table
+        # entry, in a single jitted gather-scatter
+        self._cow_kernel = jax.jit(
+            lambda k, v, tbl, old, new, slot, col: (
+                k.at[:, new].set(k[:, old]),
+                v.at[:, new].set(v[:, old]),
+                tbl.at[slot, col].set(new)))
 
     # ------------------------------------------------------------------
     @property
@@ -336,6 +388,7 @@ class ServeEngine:
                   mesh=None, max_batch: Optional[int] = None,
                   max_len: Optional[int] = None, seed: int = 0,
                   kv_admission: Optional[str] = None,
+                  kv_prefix_reuse: Optional[str] = None,
                   preemption: Optional[PreemptionPolicy] = None
                   ) -> "ServeEngine":
         """Build an engine from the frozen plan artifact.
@@ -413,6 +466,9 @@ class ServeEngine:
                   kv_admission=(kv_admission if kv_admission is not None
                                 else str(plan.estimates.get("kv_admission",
                                                             "reserve"))),
+                  kv_prefix_reuse=(
+                      kv_prefix_reuse if kv_prefix_reuse is not None
+                      else str(plan.estimates.get("kv_prefix_reuse", "on"))),
                   preemption=preemption)
         eng.plan = plan
         if mesh is not None:
@@ -515,12 +571,19 @@ class ServeEngine:
 
     def block_stats(self) -> Dict[str, int]:
         """Pool accounting (``free + in_use`` always equals ``total``;
-        dense engines report an empty 0-block pool)."""
-        return self._alloc.stats()
+        dense engines report an empty 0-block pool).  ``shared`` counts
+        resident blocks with more than one holder; ``prefix_trie`` the
+        blocks the prefix cache currently indexes."""
+        st = self._alloc.stats()
+        st["prefix_trie"] = (len(self._prefix)
+                             if self._prefix is not None else 0)
+        return st
 
     def pressure_stats(self) -> Dict[str, Any]:
         """Overload-degradation telemetry: how often the engine had to
-        fall back down the grant → migrate → preempt → shed ladder."""
+        fall back down the grant → migrate → preempt → shed ladder —
+        plus the prefix-sharing counters (blocks shared right now,
+        tokens whose prefill was aliased away, CoW copies taken)."""
         return {"tick": self.tick,
                 "preemptions": self.preemptions,
                 "migrations": self.migrations,
@@ -528,7 +591,16 @@ class ServeEngine:
                 "shed": len(self.shed),
                 "parked": len(self.preempted),
                 "straggler_ticks": self.straggler_ticks,
-                "overloaded": self.overloaded()}
+                "overloaded": self.overloaded(),
+                "shared_blocks": self._alloc.shared_blocks,
+                "prefix_hits": (self._prefix.hits
+                                if self._prefix is not None else 0),
+                "prefix_hit_tokens": (self._prefix.hit_tokens
+                                      if self._prefix is not None else 0),
+                "prefix_trie": (len(self._prefix)
+                                if self._prefix is not None else 0),
+                "prefix_rides": self.prefix_rides,
+                "cow_copies": self.cow_copies}
 
     def _recent_preemptions(self) -> int:
         lo = self.tick - self.preemption.shed_window_ticks
@@ -547,67 +619,228 @@ class ServeEngine:
         the pool's data-major sub-pools."""
         return slot * self.pool_groups // self.max_batch
 
+    # ---------------- prefix matching at admission --------------------
+    def _match_info(self, r: Request) -> Optional[Dict[str, Any]]:
+        """Per-request match state for one admission pass: the feed's
+        chain hashes plus a per-group memo of trie matches (matching is
+        per sub-pool — the combine contract forbids foreign blocks)."""
+        if self._prefix is None:
+            return None
+        return {"hashes": chain_hashes(r.feed_tokens, self.block_len),
+                "matches": {}}
+
+    def _match_for(self, r: Request, info: Optional[Dict[str, Any]],
+                   group: int) -> List[int]:
+        """Longest resident prefix of ``r``'s feed in ``group``'s trie,
+        as block ids.  Capped one token short of the whole feed: the
+        last feed token's compute must always run here (its logits seed
+        a fresh request's sampling; its KV row is the one a resumed
+        request's next tick appends)."""
+        if info is None:
+            return []
+        got = info["matches"].get(group)
+        if got is None:
+            got = self._prefix.match(info["hashes"], group)
+            cap = (len(r.feed_tokens) - 1) // self.block_len
+            got = got[:cap]
+            info["matches"][group] = got
+        return got
+
+    def _bucket_key(self, r: Request, matched: List[int]):
+        """Admission bucket identity: ``(matched_tokens, tail_tokens)``.
+        Compute-skip archs batch one jitted tail forward per bucket, so
+        every member must skip the same row count; archs that cannot
+        skip (SSM state) bucket by feed length alone."""
+        flen = len(r.feed_tokens)
+        if self._skip_prefix and matched:
+            m = len(matched) * self.block_len
+            return (m, flen - m)
+        return (0, flen)
+
+    def _can_ride(self, r: Request, matched: List[int]) -> bool:
+        """True when admission can skip prefill *entirely*: a fresh
+        request whose whole feed-but-last-token is aliased from the
+        trie.  Its first decode tick feeds that last token and samples
+        the first output — the decode-ride path (zero prefill calls;
+        decode logits are bitwise the prefill logits for the same
+        position, which the shared-prefix identity tests pin)."""
+        if not (self._skip_prefix and matched and not r.out_tokens):
+            return False
+        if r.max_new_tokens <= 1:
+            return False      # satisfied by the sample; never holds blocks
+        return len(matched) * self.block_len == len(r.feed_tokens) - 1
+
+    def _register_prefix(self, r: Request,
+                         info: Optional[Dict[str, Any]],
+                         group: int) -> None:
+        """Index ``r``'s full feed blocks in its sub-pool's trie (first
+        writer wins) and remember the hashes for migration re-keying."""
+        if self._prefix is None or info is None or not r.blocks:
+            return
+        hashes = info["hashes"]
+        r.prefix_hashes = list(hashes)
+        self._prefix.insert(hashes, r.blocks[:len(hashes)], group)
+
+    def _release_blocks(self, blocks: List[int]) -> None:
+        """Drop one holder reference per block; prune trie entries for
+        the blocks that actually left the pool (a freed id's next
+        tenant writes unrelated rows)."""
+        freed = self._alloc.release(blocks)
+        if self._prefix is not None and freed:
+            self._prefix.evict(freed)
+
     def _place(self, r: Request, avail: List[int],
-               free_by_group: Dict[int, int]) -> Optional[int]:
-        """Reserve the first free slot (FIFO) whose sub-pool can cover
-        ``r``'s admission block need; mutates both accounting
-        structures."""
-        need = self._admission_blocks(r)
+               free_by_group: Dict[int, int],
+               info: Optional[Dict[str, Any]] = None) -> Optional[int]:
+        """Reserve a free slot whose sub-pool can cover ``r``'s
+        admission block need net of aliased blocks; mutates both
+        accounting structures.  With match info and multiple sub-pools,
+        slots are tried longest-match-first (admission prefers the
+        sub-pool holding the longest resident prefix), FIFO otherwise.
+        """
+        need_full = self._admission_blocks(r)
+        order = list(range(len(avail)))
+        if info is not None and self.pool_groups > 1:
+            order.sort(key=lambda i: (
+                -len(self._match_for(r, info, self._slot_group(avail[i]))),
+                avail[i]))
+        for i in order:
+            g = self._slot_group(avail[i])
+            matched = self._match_for(r, info, g) if info is not None else []
+            need = max(0, need_full - len(matched))
+            if need <= free_by_group[g]:
+                free_by_group[g] -= need
+                return avail.pop(i)
+        return None
+
+    def _place_bucket(self, r: Request, info: Optional[Dict[str, Any]],
+                      key, avail: List[int],
+                      free_by_group: Dict[int, int]) -> Optional[int]:
+        """Like :meth:`_place`, but only into a slot whose sub-pool's
+        match keeps ``r`` in the head request's admission bucket (same
+        skipped-prefix length, same tail length)."""
+        need_full = self._admission_blocks(r)
         for i, s in enumerate(avail):
-            if need <= free_by_group[self._slot_group(s)]:
-                free_by_group[self._slot_group(s)] -= need
+            g = self._slot_group(s)
+            matched = self._match_for(r, info, g) if info is not None else []
+            if self._bucket_key(r, matched) != key:
+                continue
+            need = max(0, need_full - len(matched))
+            if need <= free_by_group[g]:
+                free_by_group[g] -= need
                 return avail.pop(i)
         return None
 
     def _admit(self) -> None:
-        """Bucketed batched admission: all pending prompts of the
-        head-of-line's feed length that fit a (slot, sub-pool) pair are
-        prefilled in ONE jitted call.  A request takes its admission
-        blocks from the sub-pool of the data shard hosting its slot
-        (2-D pool sharding; one global pool when ``pool_groups == 1``).
-        When no pair can cover the head request, admission waits for a
-        finisher — head-of-line blocking, so exhaustion delays rather
-        than starves (and ``run_until_idle`` raises on true deadlock).
+        """Bucketed batched admission: all pending prompts sharing the
+        head-of-line's bucket — feed length, plus skipped-prefix length
+        when prefix reuse matches resident blocks — that fit a (slot,
+        sub-pool) pair are prefilled in ONE jitted call (tail-only when
+        a prefix is aliased).  A request whose whole feed-but-last is
+        resident skips prefill entirely and goes straight to decode.
+        A request takes its admission blocks from the sub-pool of the
+        data shard hosting its slot (2-D pool sharding; one global pool
+        when ``pool_groups == 1``).  When no pair can cover the head
+        request, admission waits for a finisher — head-of-line
+        blocking, so exhaustion delays rather than starves (and
+        ``run_until_idle`` raises on true deadlock).
         """
         while self.pending and self.free_slots:
             head = self.pending[0]
-            plen = len(head.feed_tokens)
+            info0 = self._match_info(head)
             avail = list(self.free_slots)
             free_by_group = {g: self._alloc.free_in(g)
                              for g in range(self.pool_groups)}
-            s0 = self._place(head, avail, free_by_group)
+            s0 = self._place(head, avail, free_by_group, info0)
             if s0 is None:
                 return                 # pool exhausted: wait for frees
+            m0 = self._match_for(head, info0, self._slot_group(s0))
+            if self._can_ride(head, m0):
+                self.pending.pop(0)
+                self.free_slots.remove(s0)
+                self._admit_ride(head, s0, info0)
+                continue
+            key0 = self._bucket_key(head, m0)
             group: List[Request] = [head]
             slots: List[int] = [s0]
+            matches: List[List[int]] = [m0]
+            infos: List[Optional[Dict[str, Any]]] = [info0]
             rest: List[Request] = []
             for r in self.pending[1:]:
-                s = self._place(r, avail, free_by_group) \
-                    if len(r.feed_tokens) == plen else None
+                s = None
+                info = None
+                if len(r.feed_tokens) == len(head.feed_tokens):
+                    info = self._match_info(r)
+                    s = self._place_bucket(r, info, key0, avail,
+                                           free_by_group)
                 if s is None:
                     rest.append(r)
                 else:
                     group.append(r)
                     slots.append(s)
+                    matches.append(
+                        self._match_for(r, info, self._slot_group(s)))
+                    infos.append(info)
             self.pending = rest
             for s in slots:
                 self.free_slots.remove(s)
-            self._admit_group(group, slots)
+            self._admit_group(group, slots, matches, infos, key0)
 
-    def _admit_group(self, group: List[Request],
-                     slots: List[int]) -> None:
-        """One jitted prefill for a same-length bucket of requests,
-        each with a pre-reserved slot (its sub-pool is the one the
-        request's blocks will come from).  A resumed (previously
-        preempted) request's feed is prompt+generated-so-far: the
-        prefill rebuilds its KV rows and its sample is discarded — the
-        host already holds the token it would re-derive.
+    def _admit_ride(self, r: Request, slot: int,
+                    info: Dict[str, Any]) -> None:
+        """Zero-prefill admission: alias the matched blocks (refcount
+        bump), grant the fresh ones the budget calls for, install the
+        table row, and hand the request straight to decode — its first
+        tick feeds the last prompt token at position ``matched_tokens``
+        and samples the first output."""
+        g = self._slot_group(slot)
+        matched = self._match_for(r, info, g)
+        need = self._admission_blocks(r)
+        self._alloc.retain(matched)
+        fresh = self._alloc.allocate(need - len(matched), g)
+        assert fresh is not None, "placement checked the free count"
+        r.blocks = list(matched) + fresh
+        rows = np.full((int(self.cache["block_tbl"].shape[1]),), -1,
+                       np.int32)
+        rows[:len(r.blocks)] = r.blocks
+        self.cache["block_tbl"] = \
+            self.cache["block_tbl"].at[slot].set(jnp.asarray(rows))
+        r.slot = int(slot)
+        m_tok = len(matched) * self.block_len
+        self.slot_len[slot] = m_tok
+        self.active[slot] = r
+        self._register_prefix(r, info, g)
+        self._prefix.hits += 1
+        self._prefix.hit_tokens += m_tok
+        self.prefix_rides += 1
+
+    def _admit_group(self, group: List[Request], slots: List[int],
+                     matches: Optional[List[List[int]]] = None,
+                     infos: Optional[List[Optional[Dict[str, Any]]]] = None,
+                     bucket=None) -> None:
+        """One jitted prefill for a bucket of requests, each with a
+        pre-reserved slot (its sub-pool is the one the request's blocks
+        will come from).  A resumed (previously preempted) request's
+        feed is prompt+generated-so-far: the prefill rebuilds its KV
+        rows and its sample is discarded — the host already holds the
+        token it would re-derive.
+
+        With a nonzero skipped-prefix bucket (compute-skip archs whose
+        members all matched the same number of resident blocks), the
+        matched rows are *gathered from the pool* and only the tail
+        runs through :func:`repro.models.lm.prefill_tail`; the matched
+        blocks are aliased, not rewritten.
 
         The batch dim is padded to the next power of two (dummy rows
         repeat the first prompt and are discarded), so each prompt
         length compiles at most ``log2(max_batch)`` prefill programs
         instead of one per arrival-group size."""
-        toks = np.stack([r.feed_tokens for r in group])
+        if matches is None:
+            matches = [[] for _ in group]
+        if infos is None:
+            infos = [None] * len(group)
+        m_tok = bucket[0] if bucket else 0
+        toks = np.stack([r.feed_tokens[m_tok:] for r in group])
         padded = 1
         while padded < len(group):
             padded *= 2
@@ -615,8 +848,27 @@ class ServeEngine:
         if padded > len(group):
             toks = np.concatenate(
                 [toks, np.repeat(toks[:1], padded - len(group), axis=0)])
-        logits, cacheg = self._prefill(self.params,
-                                       {"tokens": jnp.asarray(toks)})
+        cacheg = None
+        if m_tok:
+            # gather the aliased prefix rows (resident pool blocks) as
+            # the tail forward's K/V prefix; dummy batch rows reuse the
+            # first member's blocks (discarded, and read-only anyway)
+            nbm = m_tok // self.block_len
+            blk = np.asarray(matches, np.int32)            # (Bs, nbm)
+            if padded > len(group):
+                blk = np.concatenate(
+                    [blk, np.repeat(blk[:1], padded - len(group), axis=0)])
+            bid = jnp.asarray(blk.reshape(-1))
+            pk = self.cache["k"][:, bid]
+            pv = self.cache["v"][:, bid]
+            L = pk.shape[0]
+            pk = pk.reshape(L, padded, m_tok, *pk.shape[3:])
+            pv = pv.reshape(L, padded, m_tok, *pv.shape[3:])
+            logits, tail_k, tail_v = self._prefill_tail(
+                self.params, {"tokens": jnp.asarray(toks)}, pk, pv)
+        else:
+            logits, cacheg = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(toks)})
         self.prefill_calls += 1
         self.prefill_batches.append(len(group))
         keys = jax.random.split(self._next_key(), len(group))
@@ -651,9 +903,15 @@ class ServeEngine:
         plen = len(live[0].feed_tokens)
         slots = np.asarray(live_slots, np.int32)
         gidx = np.asarray(idxs, np.int32)
+        live_matches = [matches[i] for i in idxs]
         if self.arch.has_attention:
             if self.kv_residency == "paged":
-                self._scatter_paged_prefill(live, slots, gidx, cacheg, plen)
+                if m_tok:
+                    self._scatter_tail(live, slots, gidx, tail_k, tail_v,
+                                       plen, m_tok, live_matches)
+                else:
+                    self._scatter_paged_prefill(live, slots, gidx, cacheg,
+                                                plen, live_matches)
             else:
                 for key in ("k", "v"):
                     self.cache[key] = self.cache[key].at[:, slots].set(
@@ -666,41 +924,108 @@ class ServeEngine:
             r.slot = int(slot)
             self.slot_len[slot] = plen
             self.active[int(slot)] = r
+        for i, r in enumerate(live):
+            g = self._slot_group(int(slots[i]))
+            self._register_prefix(r, infos[idxs[i]], g)
+            if self._prefix is not None:
+                mt = live_matches[i]
+                if mt:
+                    self._prefix.hits += 1
+                    self._prefix.hit_tokens += len(mt) * self.block_len
+                else:
+                    self._prefix.misses += 1
 
     def _scatter_paged_prefill(self, live: List[Request], slots: np.ndarray,
-                               gidx: np.ndarray, cacheg, plen: int) -> None:
+                               gidx: np.ndarray, cacheg, plen: int,
+                               matches: Optional[List[List[int]]] = None
+                               ) -> None:
         """Move a bucket's prefilled KV rows into their pool blocks.
 
-        Each survivor gets its admission block budget now (the full
-        worst-case budget under ``reserve``, just the feed rows' blocks
-        under ``grant``) from *its slot's sub-pool* — admission reserved
-        the blocks, so the draw cannot fail — the feed rows are
-        scattered block-wise into the pool in one gather/reshape per
-        cache tensor, and the block table rows are installed (-1
-        padding past the allocation).
+        Each survivor gets its admission block budget now — matched
+        blocks aliased with a refcount bump, the rest freshly allocated
+        from *its slot's sub-pool* (admission reserved them, so the
+        draw cannot fail).  Only the *unmatched* feed columns are
+        scattered (a matched block already holds exactly those rows —
+        writing them again would race a sharer's CoW), in one
+        gather/scatter per cache tensor; then the block-table rows are
+        installed (-1 padding past the allocation).  This is the path
+        hybrid (SSM-carrying) archs take on a prefix hit: full-feed
+        prefill for the state, aliased capacity for the matched KV.
         """
         bl = self.block_len
         nbp = -(-plen // bl)               # blocks holding prefilled rows
         nb_cols = self.cache["block_tbl"].shape[1]
         rows = np.full((len(live), nb_cols), -1, np.int32)
-        prompt_blocks: List[int] = []
+        ent_req: List[int] = []            # prefill batch row per block
+        ent_col: List[int] = []            # feed block column per block
+        ent_blk: List[int] = []            # destination pool block
         for i, r in enumerate(live):
+            matched = list(matches[i]) if matches else []
             need = self._admission_blocks(r)
-            r.blocks = self._alloc.allocate(
-                need, self._slot_group(int(slots[i])))
-            assert r.blocks is not None, "admission reserved these blocks"
-            assert need >= nbp, (need, nbp)
+            assert need >= nbp >= len(matched), (need, nbp, len(matched))
+            if matched:
+                self._alloc.retain(matched)
+            fresh = self._alloc.allocate(need - len(matched),
+                                         self._slot_group(int(slots[i])))
+            assert fresh is not None, "admission reserved these blocks"
+            r.blocks = matched + fresh
             rows[i, :need] = r.blocks
-            prompt_blocks.extend(r.blocks[:nbp])
-        blk_ids = np.asarray(prompt_blocks, np.int32)
-        for key in ("k", "v"):
-            upd = cacheg[key][:, gidx, :nbp * bl]   # (L, Bs, <=nbp*bl, K, hd)
+            for c in range(len(matched), nbp):
+                ent_req.append(int(gidx[i]))
+                ent_col.append(c)
+                ent_blk.append(r.blocks[c])
+        if ent_blk:
+            S = cacheg["k"].shape[2]
+            req = jnp.asarray(np.asarray(ent_req, np.int32)[:, None])
+            ridx = np.asarray(ent_col, np.int32)[:, None] * bl \
+                + np.arange(bl, dtype=np.int32)[None, :]
+            # rows past an unaligned max_len clamp onto the last cache
+            # row: garbage, but masked (pos >= cache_len) until a decode
+            # append overwrites them
+            ridx = jnp.asarray(np.minimum(ridx, S - 1))
+            blk_ids = jnp.asarray(np.asarray(ent_blk, np.int32))
+            for key in ("k", "v"):
+                upd = cacheg[key][:, req, ridx]        # (L, E, bl, K, hd)
+                self.cache[key] = self.cache[key].at[:, blk_ids].set(upd)
+        self.cache["block_tbl"] = \
+            self.cache["block_tbl"].at[slots].set(jnp.asarray(rows))
+
+    def _scatter_tail(self, live: List[Request], slots: np.ndarray,
+                      gidx: np.ndarray, tail_k, tail_v, plen: int,
+                      m_tok: int, matches: List[List[int]]) -> None:
+        """Install aliased-prefix block tables and scatter the
+        tail-only prefill's K/V rows into freshly granted blocks (the
+        compute-skip counterpart of :meth:`_scatter_paged_prefill`:
+        the first ``m_tok`` rows were never recomputed — their blocks
+        are aliased as-is)."""
+        bl = self.block_len
+        nbm = m_tok // bl
+        nbp = -(-plen // bl)
+        nb_cols = self.cache["block_tbl"].shape[1]
+        rows = np.full((len(live), nb_cols), -1, np.int32)
+        tail_blocks: List[int] = []
+        for i, r in enumerate(live):
+            matched = list(matches[i])
+            assert len(matched) == nbm, (len(matched), nbm)
+            need = self._admission_blocks(r)
+            assert need >= nbp > nbm, (need, nbp, nbm)
+            self._alloc.retain(matched)
+            fresh = self._alloc.allocate(need - nbm,
+                                         self._slot_group(int(slots[i])))
+            assert fresh is not None, "admission reserved these blocks"
+            r.blocks = matched + fresh
+            rows[i, :need] = r.blocks
+            tail_blocks.extend(r.blocks[nbm:nbp])
+        ntb = nbp - nbm
+        blk_ids = jnp.asarray(np.asarray(tail_blocks, np.int32))
+        T = plen - m_tok
+        for key, src in (("k", tail_k), ("v", tail_v)):
+            upd = src[:, gidx]                         # (L, Bs, T, K, hd)
             L = upd.shape[0]
-            if upd.shape[2] < nbp * bl:             # max_len not block-aligned
-                upd = jnp.pad(upd, ((0, 0), (0, 0),
-                                    (0, nbp * bl - upd.shape[2]),
+            if T < ntb * bl:
+                upd = jnp.pad(upd, ((0, 0), (0, 0), (0, ntb * bl - T),
                                     (0, 0), (0, 0)))
-            upd = upd.reshape(L, len(live) * nbp, bl, *upd.shape[3:])
+            upd = upd.reshape(L, len(live) * ntb, bl, *upd.shape[3:])
             self.cache[key] = self.cache[key].at[:, blk_ids].set(upd)
         self.cache["block_tbl"] = \
             self.cache["block_tbl"].at[slots].set(jnp.asarray(rows))
@@ -751,6 +1076,56 @@ class ServeEngine:
                     continue
                 self._preempt_for(r)
 
+    # ---------------- copy-on-write barrier ---------------------------
+    def _ensure_writable(self) -> None:
+        """Before a decode tick, no slot may append into a block with
+        refcount > 1 — writers never mutate shared state.  The natural
+        flow keeps appends in private blocks (only *full* feed chunks
+        are ever aliased, and the matched-token cap leaves the append
+        column past them), so this barrier is the structural guarantee
+        — and the path the forced-divergence test drives directly.  A
+        CoW needs a fresh block; under pressure it degrades like a
+        grant, by preempting a victim from the slot's sub-pool
+        (migration is no help here — it refuses to move shared
+        blocks)."""
+        if self.kv_residency != "paged" or self._prefix is None:
+            return
+        if self._alloc.shared_blocks == 0:
+            return
+        for r in sorted(self.active.values(), key=lambda x: x.rid):
+            guard = 0
+            while self.active.get(r.slot) is r:
+                col = int(self.slot_len[r.slot]) // self.block_len
+                if col >= len(r.blocks):
+                    break          # the grant ladder owns missing blocks
+                blk = r.blocks[col]
+                if self._alloc.refcount(blk) <= 1:
+                    break
+                guard += 1
+                assert guard <= self.max_batch + self.n_blocks + 2, \
+                    "CoW ladder did not converge"
+                fresh = self._grant(self._slot_group(r.slot))
+                if fresh is not None:
+                    self._cow_copy(r, col, fresh)
+                    break
+                self._preempt_for(r)
+
+    def _cow_copy(self, r: Request, col: int, fresh: int) -> None:
+        """Copy ``r``'s shared append block into ``fresh`` (k/v rows +
+        table entry, one jitted gather-scatter) and drop this holder's
+        reference to the original — the sharers keep it resident, trie
+        entry and all."""
+        old = r.blocks[col]
+        k, v, tbl = self._cow_kernel(
+            self.cache["k"], self.cache["v"], self.cache["block_tbl"],
+            np.int32(old), np.int32(fresh), np.int32(r.slot),
+            np.int32(col))
+        self.cache["k"], self.cache["v"] = k, v
+        self.cache["block_tbl"] = tbl
+        r.blocks[col] = fresh
+        self._release_blocks([old])
+        self.cow_copies += 1
+
     def _try_migrate(self, r: Request) -> bool:
         """Rung 2: move ``r`` — blocks, table row, per-slot states — to
         a donor sub-pool that idles while its home pool is hot.  The
@@ -759,8 +1134,15 @@ class ServeEngine:
         current holding plus the block being asked for; the idlest such
         donor wins.  Preserves the slot→sub-pool combine contract: after
         the move every block the slot holds lives in its new data
-        shard's sub-pool."""
+        shard's sub-pool.
+
+        Sharing-aware: a slot holding any *shared* block stays put —
+        sharers' tables point at the original ids, and moving only this
+        holder's copy would strand their aliases (shared blocks are
+        pinned until their refcount drops back to 1)."""
         if self.pool_groups <= 1:
+            return False
+        if any(self._alloc.refcount(b) > 1 for b in r.blocks):
             return False
         src = self._slot_group(r.slot)
         need_now = len(r.blocks) + 1
@@ -794,8 +1176,14 @@ class ServeEngine:
         rows[:need_now] = new_blocks
         tbl = self.cache["block_tbl"].at[s2].set(jnp.asarray(rows))
         self.cache["block_tbl"] = tbl.at[s1].set(-1)
-        self._alloc.release(old)
+        self._release_blocks(old)
         r.blocks = list(new_blocks)
+        if self._prefix is not None and r.prefix_hashes:
+            # the moved blocks hold the same content: re-key the trie
+            # onto the new ids in the donor sub-pool (first writer wins,
+            # so a still-resident original keeps its entry)
+            self._prefix.insert(r.prefix_hashes,
+                                r.blocks[:len(r.prefix_hashes)], g2)
         del self.active[s1]
         self.active[s2] = r
         r.slot = int(s2)
@@ -809,10 +1197,21 @@ class ServeEngine:
     def _preempt_for(self, r: Request) -> None:
         """Rung 3: evict a victim from the needy slot's sub-pool so its
         grant can succeed (the victim may be the needy request itself,
-        which also resolves the need)."""
+        which also resolves the need).
+
+        Sharing-aware: shared blocks are pinned — candidates holding
+        the fewest shared blocks are preferred (evicting a sharer only
+        drops a reference, freeing at most its private blocks, so
+        victims whose eviction actually returns memory go first)."""
         group = self._slot_group(r.slot)
         cands = [a for a in self.active.values()
                  if self._slot_group(a.slot) == group]
+        if self._prefix is not None and len(cands) > 1:
+            def shared(a: Request) -> int:
+                return sum(1 for b in a.blocks
+                           if self._alloc.refcount(b) > 1)
+            lo = min(shared(a) for a in cands)
+            cands = [a for a in cands if shared(a) == lo]
         victim = self.preemption.pick_victim(cands, time.time())
         self._preempt(victim)
 
@@ -914,6 +1313,7 @@ class ServeEngine:
         self._readmit_preempted()
         self._admit()
         self._ensure_grants()
+        self._ensure_writable()
         if not self.active:
             self._observe_tick(t0)
             return 0
@@ -924,7 +1324,11 @@ class ServeEngine:
         self._sync_pos()
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for slot, r in self.active.items():
-            tokens[slot, 0] = r.out_tokens[-1]
+            # a ride-admitted request has no output yet: its first tick
+            # feeds the last prompt token (the one admission left
+            # unaliased) and samples the first output
+            tokens[slot, 0] = (r.out_tokens[-1] if r.out_tokens
+                               else int(r.feed_tokens[-1]))
         logits, self.cache = self._decode(self.params, self.cache,
                                           {"tokens": jnp.asarray(tokens)})
         slot_keys = jax.random.split(self._next_key(), self.max_batch)
@@ -932,6 +1336,8 @@ class ServeEngine:
         for slot, r in list(self.active.items()):
             tok = self._sample(logits[slot], r.temperature, slot_keys[slot])
             r.out_tokens.append(int(tok))
+            if r.t_first == 0.0:       # first token via decode-ride
+                r.t_first = time.time()
             self.slot_len[slot] += 1
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True
@@ -961,7 +1367,7 @@ class ServeEngine:
         self.free_slots.append(slot)
         self.slot_len[slot] = 0
         if self.kv_residency == "paged" and r.blocks:
-            self._alloc.release(r.blocks)
+            self._release_blocks(r.blocks)
             r.blocks = []
             self.cache["block_tbl"] = \
                 self.cache["block_tbl"].at[slot].set(-1)

@@ -219,6 +219,139 @@ def test_flash_decode_paged_2d_matches_oracle():
     """)
 
 
+def test_flash_decode_paged_2d_aliased_tables():
+    """Cross-request block aliasing through the 2-D combine: a block id
+    appearing in TWO slots' tables (a refcounted prefix hit, each inside
+    its data shard's sub-pool) reads exactly like a private copy of the
+    same rows, and the fused append only ever touches each slot's
+    private tail block — the CoW contract the engine enforces means no
+    slot appends into a shared id, so aliasing must be invisible to the
+    kernel."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.dist.flash_decode import flash_decode_paged, \\
+            pool_sharding_kind
+        from repro.kernels import ref
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, H, K, D, bl, N = 4, 8, 4, 16, 8, 16
+        assert pool_sharding_kind(mesh, N, B) == "2d"
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, D))
+        kn = jax.random.normal(ks[1], (B, 1, K, D))
+        vn = jax.random.normal(ks[2], (B, 1, K, D))
+        kp = jax.random.normal(ks[3], (N, bl, K, D))
+        vp = jax.random.normal(ks[4], (N, bl, K, D))
+        # slots 0-1 (data shard 0, ids [0,8)) share prefix blocks
+        # {0, 5}; slots 2-3 (shard 1, ids [8,16)) share {8, 15}; every
+        # slot appends into its own private tail block
+        ta = jnp.asarray([[0, 5, 2, -1], [0, 5, 6, -1],
+                          [8, 15, 11, 13], [8, 15, 12, -1]], jnp.int32)
+        # private twin: duplicate the shared rows into same-shard ids
+        # (1 sits on block 0's (data, model) shard, 4 on 5's, ...) so
+        # the combine partitions identically and only aliasing differs
+        kpp = kp.at[1].set(kp[0]).at[4].set(kp[5]) \\
+                .at[9].set(kp[8]).at[14].set(kp[15])
+        vpp = vp.at[1].set(vp[0]).at[4].set(vp[5]) \\
+                .at[9].set(vp[8]).at[14].set(vp[15])
+        tp = jnp.asarray([[0, 5, 2, -1], [1, 4, 6, -1],
+                          [8, 15, 11, 13], [9, 14, 12, -1]], jnp.int32)
+        pos = jnp.asarray([17, 20, 27, 16], jnp.int32)
+        for win in (0, 8):
+            run = jax.jit(lambda kk, vv, tt: flash_decode_paged(
+                q, kn, vn, kk, vv, tt, pos, win, mesh=mesh))
+            ctx_a, kp2, vp2 = run(kp, vp, ta)
+            ctx_p, kpp2, vpp2 = run(kpp, vpp, tp)
+            err = float(jnp.abs(ctx_a - ctx_p).max())
+            assert err < 1e-5, (win, err)
+            # aliased run matches the gather oracle too
+            kr = ref.paged_append_ref(kp, kn, pos, ta)
+            vr = ref.paged_append_ref(vp, vn, pos, ta)
+            r = ref.paged_decode_attention_ref(
+                q[:, 0], kr, vr, ta, cache_len=pos + 1, window=win)
+            assert float(jnp.abs(ctx_a[:, 0] - r).max()) < 1e-5
+            # appends landed only in private tail blocks; the shared
+            # prefix blocks came through bit-identical
+            assert bool(jnp.allclose(kp2, kr)), "2-D append corrupted"
+            for b in (0, 5, 8, 15):
+                assert bool((kp2[b] == kp[b]).all()), (win, b)
+                assert bool((vp2[b] == vp[b]).all()), (win, b)
+        print("OK")
+    """)
+
+
+def test_serve_paged_2d_shared_prefix_token_identity():
+    """Prefix sharing under 2-D pool sharding respects the combine
+    contract: one trie per data-shard sub-pool, admission prefers the
+    sub-pool holding the longest match, aliased blocks stay inside the
+    owning sub-pool, and a staggered shared-system-prompt batch through
+    ``shard_map_flash_paged_2d`` is token-identical to the reuse-off
+    run — with the pool whole and the tries empty after drain.
+
+    Prompt tails are several tokens long so matched admissions take the
+    tail-prefill path (exact: same kernel class as full prefill over
+    identical pool rows).  The zero-prefill decode-ride is deliberately
+    NOT exercised here: a ride computes its first token through the
+    sharded decode combine, whose reduction order differs from the
+    prefill kernel's on a >1-shard mesh — the same near-tie rounding
+    caveat ``test_serve_paged_2d_token_identity_vs_dense_sequential``
+    documents.  Ride token-identity is pinned bitwise on the
+    single-shard paths in test_serve_mixed."""
+    run_subprocess("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import ShapeConfig, get_arch
+        from repro.core.pipeline import specialize
+        from repro.models import lm
+        from repro.serve.engine import ServeEngine
+
+        arch = dataclasses.replace(get_arch("qwen3-8b").reduced(),
+                                   n_kv_heads=1)
+        shape = ShapeConfig("serve_2d_px", "decode", 64, 4)
+        plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                          mesh_shape=(2, 4), cache=False)
+        assert plan.estimates["kv_residency"] == "paged"
+        assert plan.estimates["kv_prefix_reuse"] == "on"
+        assert plan.estimates["kv_pool_data_degree"] == 2
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        params = lm.init_params(arch, jax.random.PRNGKey(0),
+                                *plan.padded_sizes())
+
+        def run(reuse):
+            eng = ServeEngine.from_plan(plan, params, arch=arch,
+                                        mesh=mesh, kv_prefix_reuse=reuse)
+            assert eng.decode_path == "shard_map_flash_paged_2d"
+            assert eng.pool_groups == 2
+            bl = eng.block_len
+            rng = np.random.default_rng(0)
+            sysp = rng.integers(0, arch.vocab_size, bl).astype(np.int32)
+            # 5-token tails: matched blocks cover 16 of 21 feed tokens,
+            # so admission aliases the prefix and tail-prefills the rest
+            prompts = [np.concatenate(
+                           [sysp, rng.integers(0, arch.vocab_size, 5)]
+                       ).astype(np.int32) for _ in range(4)]
+            eng.submit(prompts[0], max_new_tokens=4)
+            eng.step()
+            eng.step()
+            for p in prompts[1:]:
+                eng.submit(p, max_new_tokens=4)
+            done = eng.run_until_idle(max_ticks=64)
+            assert len(done) == 4
+            if reuse == "on":
+                ps = eng.pressure_stats()
+                assert ps["prefix_hits"] >= 1, ps
+                # the per-sub-pool tries: one per data shard
+                assert eng._prefix is not None \\
+                    and eng._prefix.groups == 2
+                st = eng.block_stats()
+                assert st["prefix_trie"] == 0 and st["shared"] == 0
+            stats = eng.block_stats()
+            assert stats["free"] == stats["total"], stats
+            return {r.rid: r.out_tokens for r in done}
+
+        assert run("on") == run("off")
+        print("OK")
+    """, timeout=900)
+
+
 def test_serve_from_plan_paged_pool_sharded():
     """A paged decode plan served end-to-end on an 8-wide model axis:
     the pool dim really lands sharded, the engine reports the pool-

@@ -157,6 +157,132 @@ def test_decode_step_paged_matches_dense_cache():
                            np.asarray(dview, np.float32))
 
 
+# ---------------- cross-request block aliasing ----------------
+#
+# The sharing contract every paged reader must honour: a block id that
+# appears in TWO slots' tables (a refcounted prefix hit) reads exactly
+# like a private copy of the same rows.  Readers are pure functions of
+# (pool, table) — any kernel that mutated its streamed blocks, or
+# special-cased duplicate ids, would break aliased decoding.
+
+def _aliased_vs_private_case(key, bl=8, K=2, D=16, dtype=jnp.float32):
+    """Two slots share blocks {0, 3} as their 2-block prefix; slot 0
+    appends into private block 7, slot 1 into private block 5.  The
+    private twin duplicates the shared rows into blocks {2, 6} so slot 1
+    no longer aliases slot 0."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 4, D)).astype(dtype)
+    kp = jax.random.normal(ks[1], (10, bl, K, D)).astype(dtype)
+    vp = jax.random.normal(ks[2], (10, bl, K, D)).astype(dtype)
+    tbl_alias = jnp.asarray([[0, 3, 7, -1], [0, 3, 5, -1]], jnp.int32)
+    kp_priv = kp.at[2].set(kp[0]).at[6].set(kp[3])
+    vp_priv = vp.at[2].set(vp[0]).at[6].set(vp[3])
+    tbl_priv = jnp.asarray([[0, 3, 7, -1], [2, 6, 5, -1]], jnp.int32)
+    cl = jnp.asarray([2 * bl + 3, 2 * bl + 6], jnp.int32)
+    return q, kp, vp, kp_priv, vp_priv, tbl_alias, tbl_priv, cl
+
+
+def test_aliased_tables_read_identical_xla_gather():
+    q, kp, vp, kpp, vpp, ta, tp, cl = _aliased_vs_private_case(
+        jax.random.PRNGKey(7))
+    got = attention_decode_paged(q[:, None], kp, vp, ta, cache_len=cl)
+    want = attention_decode_paged(q[:, None], kpp, vpp, tp, cache_len=cl)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_aliased_tables_read_identical_pallas(window):
+    q, kp, vp, kpp, vpp, ta, tp, cl = _aliased_vs_private_case(
+        jax.random.PRNGKey(8))
+    got = paged_decode_attention(q, kp, vp, ta, cache_len=cl,
+                                 window=window, interpret=True)
+    want = paged_decode_attention(q, kpp, vpp, tp, cache_len=cl,
+                                  window=window, interpret=True)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+def test_aliased_tables_read_identical_flash_and_append_private():
+    """flash-decode over aliased tables matches the private twin — and
+    the fused append only writes each slot's PRIVATE tail block (the
+    engine's CoW barrier guarantees no slot ever appends into a block
+    with refcount > 1, so appends land on distinct ids here)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.dist.flash_decode import flash_decode_paged
+    mesh = make_host_mesh()
+    q, kp, vp, kpp, vpp, ta, tp, cl = _aliased_vs_private_case(
+        jax.random.PRNGKey(9))
+    kn = jax.random.normal(jax.random.PRNGKey(10), (2, 1, 2, 16))
+    vn = jax.random.normal(jax.random.PRNGKey(11), (2, 1, 2, 16))
+    pos = cl
+    run = jax.jit(lambda kk, vv, tt: flash_decode_paged(
+        q[:, None], kn, vn, kk, vv, tt, pos, 0, mesh=mesh))
+    ctx_a, kp2, vp2 = run(kp, vp, ta)
+    ctx_p, kpp2, vpp2 = run(kpp, vpp, tp)
+    assert np.array_equal(np.asarray(ctx_a, np.float32),
+                          np.asarray(ctx_p, np.float32))
+    # appends landed in private blocks 7 and 5 under both layouts, and
+    # the shared prefix blocks 0 and 3 were left untouched
+    for b in (5, 7):
+        assert np.array_equal(np.asarray(kp2[b]), np.asarray(kpp2[b]))
+        assert np.array_equal(np.asarray(vp2[b]), np.asarray(vpp2[b]))
+    for b in (0, 3):
+        assert np.array_equal(np.asarray(kp2[b]), np.asarray(kp[b]))
+
+
+# ---------------- the prefix cache ----------------
+
+def test_chain_hashes_properties():
+    from repro.serve.prefix_cache import chain_hashes
+    t = np.arange(40, dtype=np.int32)
+    h = chain_hashes(t, 16)
+    assert len(h) == 2                       # partial tail never hashed
+    assert chain_hashes(t[:32], 16) == h     # pure prefix function
+    # chaining: a change in block 0 reflows every downstream hash
+    t2 = t.copy()
+    t2[0] += 1
+    h2 = chain_hashes(t2, 16)
+    assert h2[0] != h[0] and h2[1] != h[1]
+    # a change confined to block 1 keeps block 0's hash
+    t3 = t.copy()
+    t3[20] += 1
+    h3 = chain_hashes(t3, 16)
+    assert h3[0] == h[0] and h3[1] != h[1]
+    assert chain_hashes(t[:15], 16) == []
+    assert chain_hashes(t, 0) == []
+    # dtype-stable: the engine hashes int64 so int32/int64 feeds agree
+    assert chain_hashes(t.astype(np.int64), 16) == h
+
+
+def test_prefix_cache_match_insert_evict():
+    from repro.serve.prefix_cache import PrefixCache, chain_hashes
+    pc = PrefixCache(groups=2)
+    t = np.arange(48, dtype=np.int32)
+    h = chain_hashes(t, 16)                  # 3 chained block hashes
+    pc.insert(h, [4, 9, 2], group=0)
+    assert len(pc) == 3
+    # longest-prefix walk, and divergence stops the descent
+    assert pc.match(h, group=0) == [4, 9, 2]
+    assert pc.match(h[:2], group=0) == [4, 9]
+    div = chain_hashes(np.concatenate([t[:16], t[:32]]), 16)
+    assert pc.match(div, group=0) == [4]     # block 0 equal, then split
+    # sub-pool isolation: group 1's trie is empty
+    assert pc.match(h, group=1) == []
+    # first-writer-wins: a second resident with the same prefix does
+    # not steal the mapping (its blocks are the refcount aliases)
+    pc.insert(h, [7, 8, 1], group=0)
+    assert pc.match(h, group=0) == [4, 9, 2]
+    # evicting a middle block prunes that entry only; the walk now
+    # stops at the gap (the trailing block is unreachable by prefix)
+    pc.evict([9])
+    assert pc.match(h, group=0) == [4]
+    pc.evict([4, 2, 99])                     # unknown ids are ignored
+    assert len(pc) == 0 and pc.match(h, group=0) == []
+    st = pc.stats()
+    assert st["trie_blocks"] == 0
+
+
 # ---------------- the plan decision ----------------
 
 def test_kv_residency_plan_decision():
@@ -171,6 +297,12 @@ def test_kv_residency_plan_decision():
     assert plan.estimates["kv_pool_data_degree"] == 1
     assert plan.estimates["kv_paged_bytes"] <= plan.estimates["kv_dense_bytes"]
     assert any(s == "kv_residency" for _, s, _, _ in plan.log)
+    # prefix reuse rides on every paged plan, with its headroom estimate
+    # and a decision-log entry carrying the hit-rate bet
+    assert plan.estimates["kv_prefix_reuse"] == "on"
+    assert plan.estimates["kv_prefix_hit_headroom"] >= 0
+    assert any(s == "kv_prefix_reuse" and "aliased" in why
+               for _, s, _, why in plan.log)
 
     # a >1 data degree now 2-D-shards the pool (data-major sub-pools,
     # batch partitioned across data) instead of forcing dense — and the
@@ -245,6 +377,21 @@ def test_costmodel_kv_block_geometry():
     assert odd.n_blocks == 8
     floor = kv_block_geometry(64, 1, 2, 2, 16, align=8)   # per_seq=4 -> 8
     assert floor.n_blocks == 8
+    # prefix-reuse capacity math: r/(h + r(1-h)) approaches 1/(1-h),
+    # headroom is (r-1)*floor(h*blocks_per_seq) capped at the sub-pool,
+    # and both collapse to the no-op when reuse is off or r <= 1
+    assert geo.prefix_capacity_factor(1) == 1.0
+    f8 = geo.prefix_capacity_factor(8)
+    assert 1.0 < f8 < geo.prefix_capacity_factor(64) < 2.0   # h = 0.5
+    assert geo.prefix_hit_headroom(1) == 0
+    per = geo.blocks_per_seq
+    assert geo.prefix_hit_headroom(2) == int(0.5 * per)
+    assert geo.prefix_hit_headroom(10 ** 6) <= geo.sub_pool_blocks
+    assert geo.prefix_hit_headroom(4, hit_rate=1.0) == 3 * per
+    import dataclasses as _dc
+    off = _dc.replace(geo, prefix_reuse="off")
+    assert off.prefix_capacity_factor(8) == 1.0
+    assert off.prefix_hit_headroom(8) == 0
 
 
 # ---------------- the `repro plan` CLI ----------------

@@ -47,26 +47,30 @@ POOL_GEOMETRIES = [(8, 1), (24, 1), (16, 2), (32, 4), (64, 8)]
 
 
 def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
-    """Drive one admit/grant/finish sequence, asserting every invariant
-    the serving engine relies on after each step.
+    """Drive one admit/grant/retain/finish sequence, asserting every
+    invariant the serving engine relies on after each step.
 
-    ``ops`` yields (kind, group, need, pick) tuples; kind < 0.45 admits
-    a multi-block budget, kind < 0.6 is a one-block grow-on-demand
-    grant appended to a random live holder, else a random live holder
-    finishes.  Returns the live set for the caller's drain check.
+    ``ops`` yields (kind, group, need, pick) tuples; kind < 0.4 admits
+    a multi-block budget, kind < 0.55 is a one-block grow-on-demand
+    grant appended to a random live holder, kind < 0.7 retains a random
+    live holder's blocks into a new alias holder (a prefix-cache hit),
+    else a random live holder finishes — its blocks only come back to
+    the free list once every alias has finished too.  Returns the live
+    set for the caller's drain check.
 
-    The ``owned`` model set encodes *no grant after free* directly:
-    every released block leaves the model, so a grant handing out a
-    block some holder still (in the model) owns — i.e. a block that was
-    freed out from under it — trips the double-assignment assert.
+    The ``refs`` model (block -> holder count) encodes *no grant after
+    free* AND *no free while shared* directly: a block leaves the model
+    only when its last holder releases it, so a grant handing out a
+    block some holder still owns — freed out from under it, or freed
+    while a sharer survived — trips the double-assignment assert.
     """
     alloc = BlockAllocator(n_blocks, groups)
     sub = n_blocks // groups
     live = []                     # allocations currently held
-    owned = set()                 # model of every handed-out block
+    refs = {}                     # model: block id -> holder count
     water = [alloc.low_water(g) for g in range(groups)]
     for kind, group, need, pick in ops:
-        if kind < 0.45 or not live:
+        if kind < 0.4 or not live:
             got = alloc.allocate(need, group)
             if got is None:
                 # exhaustion is exact: refusal iff the sub-pool cannot
@@ -74,37 +78,55 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
                 assert need > alloc.free_in(group)
             else:
                 assert len(got) == need
-                assert not (set(got) & owned), "double-assigned block"
+                assert not (set(got) & set(refs)), "double-assigned block"
                 assert all(b // sub == group for b in got), \
                     "allocation crossed a sub-pool boundary"
-                owned |= set(got)
+                for b in got:
+                    refs[b] = 1
                 live.append(got)
-        elif kind < 0.6:
+        elif kind < 0.55:
             # grow-on-demand: one-block grant onto a live holder
             blk = alloc.allocate_one(group)
             if blk is None:
                 assert alloc.free_in(group) == 0
             else:
-                assert blk not in owned, "granted a freed/held block"
+                assert blk not in refs, "granted a freed/held block"
                 assert blk // sub == group
-                owned.add(blk)
+                refs[blk] = 1
                 live[pick % len(live)].append(blk)
+        elif kind < 0.7:
+            # prefix-cache hit: alias an existing holder's blocks
+            got = list(live[pick % len(live)])
+            alloc.retain(got)
+            for b in got:
+                refs[b] += 1
+            live.append(got)
         else:
             got = live.pop(pick % len(live))
-            alloc.release(got)
-            owned -= set(got)
+            freed = alloc.release(got)
+            want_freed = set()
+            for b in got:
+                refs[b] -= 1
+                if refs[b] == 0:
+                    del refs[b]
+                    want_freed.add(b)
+            assert set(freed) == want_freed, \
+                "release freed the wrong blocks (refcount drift)"
         stats = alloc.stats()
         assert stats["total"] == n_blocks
         assert stats["free"] + stats["in_use"] == n_blocks, \
             "blocks not conserved"
-        assert stats["in_use"] == len(owned)
+        assert stats["in_use"] == len(refs)
+        assert stats["shared"] == sum(1 for c in refs.values() if c > 1)
+        for b, c in refs.items():
+            assert alloc.refcount(b) == c, "refcount drift"
         assert sum(alloc.free_in(g) for g in range(groups)) == stats["free"]
         for g in range(groups):
             # watermarks only ever ratchet down, and never sit above
             # the current free count (they are the historical minimum)
             assert alloc.low_water(g) <= min(water[g], alloc.free_in(g))
             water[g] = alloc.low_water(g)
-    return alloc, live, owned
+    return alloc, live, refs
 
 
 @pytest.mark.parametrize("n_blocks,groups", POOL_GEOMETRIES)
@@ -115,12 +137,14 @@ def test_block_allocator_churn_invariants(n_blocks, groups, seed):
     ops = [(rng.random(), rng.randrange(groups),
             rng.randint(0, sub + 1),      # +1: requests past sub capacity
             rng.randrange(1 << 30)) for _ in range(400)]
-    alloc, live, owned = _fuzz_allocator(n_blocks, groups, ops, sub)
-    # drain: releasing everything restores the full pool — no leaks
+    alloc, live, refs = _fuzz_allocator(n_blocks, groups, ops, sub)
+    # drain: releasing every holder (aliases included) restores the
+    # full pool — no leaks, no lingering refcounts
     for got in live:
         alloc.release(got)
+    assert alloc.release([]) == []        # empty release is a no-op
     assert alloc.stats() == {"total": n_blocks, "free": n_blocks,
-                             "in_use": 0, "groups": groups}
+                             "in_use": 0, "shared": 0, "groups": groups}
 
 
 def test_block_allocator_rejects_bad_usage():
@@ -138,6 +162,33 @@ def test_block_allocator_rejects_bad_usage():
         alloc.release([0])                # never handed out
     assert alloc.allocate(5, group=0) is None      # > sub-pool capacity
     assert alloc.stats()["free"] == 8
+
+
+def test_block_allocator_refcount_lifecycle():
+    """The sharing contract the prefix cache leans on: retain bumps,
+    release decrements, and a block returns to its free list only when
+    the LAST holder lets go — with misuse staying loud."""
+    alloc = BlockAllocator(8, 2)
+    got = alloc.allocate(2, group=0)
+    assert [alloc.refcount(b) for b in got] == [1, 1]
+    alloc.retain(got)                     # a second holder aliases both
+    assert [alloc.refcount(b) for b in got] == [2, 2]
+    assert alloc.stats()["shared"] == 2
+    assert alloc.release(got) == []       # first holder: nothing freed
+    assert alloc.stats()["in_use"] == 2   # still resident via the alias
+    assert alloc.stats()["shared"] == 0
+    assert sorted(alloc.release(got)) == sorted(got)   # last holder frees
+    with pytest.raises(ValueError, match="double free"):
+        alloc.release(got)
+    with pytest.raises(ValueError, match="retain a free"):
+        alloc.retain(got)                 # can't resurrect a freed block
+    with pytest.raises(ValueError, match="retain a free"):
+        alloc.retain([7])                 # never handed out
+    assert alloc.refcount(5) == 0         # free blocks report zero
+    # empty-sequence release is an explicit no-op, not an error
+    assert alloc.release([]) == []
+    assert alloc.stats() == {"total": 8, "free": 8, "in_use": 0,
+                             "shared": 0, "groups": 2}
 
 
 def test_block_allocator_matches_engine_block_stats_contract():
@@ -196,8 +247,8 @@ if HAVE_HYPOTHESIS:
     def test_block_allocator_churn_invariants_hypothesis(geom, raw_ops):
         n_blocks, groups = geom
         ops = [(k, g % groups, need, pick) for k, g, need, pick in raw_ops]
-        alloc, live, owned = _fuzz_allocator(n_blocks, groups, ops,
-                                             n_blocks // groups)
+        alloc, live, refs = _fuzz_allocator(n_blocks, groups, ops,
+                                            n_blocks // groups)
         for got in live:
             alloc.release(got)
         assert alloc.stats()["free"] == n_blocks

@@ -390,6 +390,141 @@ def test_block_recycling_churn_at_full_occupancy():
             "recycled blocks changed tokens"
 
 
+# ---------------- cross-request prefix KV reuse ----------------
+#
+# The shared-prefix axis of the token-identity matrix: requests with a
+# common system prompt must decode token-identically whether their
+# prefix blocks are private (reuse off) or aliased out of the radix
+# trie (reuse on) — across archs (compute-skip vs hybrid aliasing) and
+# decode impls, including the zero-prefill decode-ride, a forced-CoW
+# divergence, and a preempt-victim-with-shared-blocks resume.
+
+def _shared_prefix_prompts(arch, seed=0):
+    """16-token shared system prompt (exactly one block at bl=16) plus
+    one distinct continuation token each — so a repeat submission's
+    match covers feed-minus-one tokens (the decode-ride shape)."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, arch.vocab_size, 16).astype(np.int32)
+    p1 = np.concatenate(
+        [sys_p, rng.integers(0, arch.vocab_size, 1).astype(np.int32)])
+    p2 = np.concatenate(
+        [sys_p, rng.integers(0, arch.vocab_size, 1).astype(np.int32)])
+    return p1, p2
+
+
+def _staggered_shared_run(arch, params, cfg, p1, p2, reuse, **kw):
+    """p1 first (registers its blocks), p2 + a p1-repeat after it is
+    resident — the repeat is the ride candidate, p2 the CoW-free
+    divergent sharer."""
+    eng = ServeEngine(arch, params, cfg, max_batch=4, max_len=32,
+                      kv_residency="paged", kv_block_len=16,
+                      kv_prefix_reuse=reuse, **kw)
+    eng.submit(p1, max_new_tokens=6)
+    eng.step()
+    eng.step()
+    eng.submit(p2, max_new_tokens=6)
+    eng.step()
+    eng.submit(p1.copy(), max_new_tokens=6)
+    done = eng.run_until_idle(max_ticks=64)
+    assert len(done) == 3
+    return {r.rid: r.out_tokens for r in done}, eng
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("name", ARCHS)
+def test_shared_prefix_token_identity(name, impl):
+    if impl == "shard_map_flash":
+        pytest.skip("the real sharded shard_map path needs >1 host "
+                    "device; the 2-D pool-sharded aliased run lives in "
+                    "tests/test_multidevice.py")
+    arch, params = _arch_params(name)
+    cfg = _impl_cfg(impl)
+    p1, p2 = _shared_prefix_prompts(arch)
+    want, _ = _staggered_shared_run(arch, params, cfg, p1, p2, "off")
+    got, eng = _staggered_shared_run(arch, params, cfg, p1, p2, "on")
+    assert got == want, (name, impl, got, want)
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"], "refcounts leaked"
+    assert stats["shared"] == 0 and stats["prefix_trie"] == 0
+    ps = eng.pressure_stats()
+    if arch.has_attention:          # SSM-only degrades to dense honestly
+        assert ps["prefix_hits"] >= 2, ps
+        assert ps["prefix_hit_tokens"] >= 32, ps
+        if not arch.has_ssm:
+            # identical repeat prompt: whole feed-but-last resident ->
+            # admitted with ZERO prefill calls
+            assert ps["prefix_rides"] >= 1, ps
+    else:
+        assert ps["prefix_hits"] == 0
+
+
+def test_shared_prefix_forced_cow_divergence():
+    """Drive the CoW write barrier directly: alias a *partial* append
+    block between holders (the state natural admission never creates —
+    only full blocks are trie-matched) and check the writer copies
+    before appending, token-identically and without leaking."""
+    arch, params = _arch_params("qwen3-8b")
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, arch.vocab_size, 20).astype(np.int32)
+
+    def run(tamper):
+        eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                          kv_residency="paged", kv_block_len=16,
+                          kv_prefix_reuse="on")
+        eng.submit(p, max_new_tokens=8)
+        eng.step()                 # prefill: slot appends into block 1
+        phantom = []
+        if tamper:
+            r = next(iter(eng.active.values()))
+            blk = r.blocks[int(eng.slot_len[r.slot]) // eng.block_len]
+            eng._alloc.retain([blk])   # a sharer appears mid-write
+            phantom.append(blk)
+        out = eng.run_until_idle(max_ticks=64)
+        if phantom:
+            eng._release_blocks(phantom)
+        return out[0].out_tokens, eng
+
+    want, _ = run(False)
+    got, eng = run(True)
+    assert got == want, "CoW changed the decoded tokens"
+    assert eng.cow_copies >= 1, "write barrier never fired"
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"], "CoW leaked a block"
+
+
+def test_shared_prefix_preempt_victim_resumes_token_identical():
+    """Preempting a victim that holds shared blocks only drops its
+    reference (the sharer keeps the prefix resident); the resume
+    re-admission re-matches the still-resident prefix and the victim's
+    tokens equal an uninterrupted reuse-off run."""
+    arch, params = _arch_params("qwen3-8b")
+    p1, p2 = _shared_prefix_prompts(arch, seed=7)
+
+    def run(reuse, preempt):
+        eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                          kv_residency="paged", kv_block_len=16,
+                          kv_admission="grant", kv_prefix_reuse=reuse)
+        eng.submit(p1, max_new_tokens=8)
+        eng.step()
+        eng.submit(p2, max_new_tokens=8)   # aliases p1's prefix block
+        eng.step()
+        if preempt:
+            assert eng.pressure_stats()["shared_blocks"] >= 1 \
+                or reuse == "off"
+            victim = min(eng.active.values(), key=lambda r: r.rid)
+            eng.preempt(victim.rid)
+        done = eng.run_until_idle(max_ticks=128)
+        assert len(done) == 2
+        return {r.rid: r.out_tokens for r in done}, eng
+
+    want, _ = run("off", False)
+    got, eng = run("on", True)
+    assert got == want, (got, want)
+    assert eng.preemptions >= 1
+    stats = eng.block_stats()
+    assert stats["free"] == stats["total"], "resume leaked references"
+
+
 # ---------------- from_plan workload-dims validation ----------------
 
 def test_from_plan_rejects_incompatible_workload_dims():
