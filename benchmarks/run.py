@@ -189,6 +189,7 @@ def table2_kernels() -> None:
     _admission_occupancy_rows(ks, H, K, D)
     _paged_2d_occupancy_rows(H, K, D)
     _prefix_overlap_rows()
+    _tiered_park_rows()
 
     plan2 = specialize("mamba2-2.7b", "train_4k")
     bp2 = plan2.partitions["ssd_scan"]
@@ -492,6 +493,73 @@ def _prefix_overlap_rows() -> None:
              f"fresh_blocks={pinned};"
              f"rides={press['prefix_rides']};"
              f"hit_tokens={press['prefix_hit_tokens']}")
+
+
+def _tiered_park_rows() -> None:
+    """Decode-tick latency under host-tier park/promote churn at
+    0/50/90% per-tick park probability (serving-layer rows, like the
+    prefix-overlap ones).
+
+    Seeded forced evictions park victims' KV in the host pool and their
+    resumes promote it back mid-run; the row's us column is the median
+    decode tick with ``kv_prefetch="on"`` (the double-buffered stage:
+    host rows start moving one tick before the resume consumes them),
+    the ``prefetch_off_us`` column the same churn with the transfer
+    taken synchronously inside the resume tick — the stall the
+    lookahead exists to hide.  park0 runs zero churn, so it is the
+    untiered decode-tick baseline both columns must stay close to."""
+    import time as timer
+
+    from repro.configs import get_arch
+    from repro.models import lm as rlm
+    from repro.models.lm import RunCfg
+    from repro.serve.engine import PreemptionPolicy, ServeEngine
+
+    arch = get_arch("qwen3-8b").reduced()
+    cfg = RunCfg(block_q=16, ssd_chunk=16)
+    params = rlm.init_params(arch, jax.random.PRNGKey(0))
+    B, bl, max_len, new = 8, 16, 64, 24
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, arch.vocab_size, (int(n),)).astype(np.int32)
+               for n in rng.integers(5, 16, B)]
+
+    for frac in (0, 50, 90):
+        stats = {}
+        for prefetch in ("on", "off"):
+            eng = ServeEngine(arch, params, cfg, max_batch=B,
+                              max_len=max_len, kv_residency="paged",
+                              kv_block_len=bl, kv_admission="grant",
+                              kv_host_blocks=4 * B, kv_prefetch=prefetch,
+                              preemption=PreemptionPolicy(
+                                  max_preemptions=64,
+                                  backoff_base_ticks=2,
+                                  backoff_cap_ticks=2))
+            for p in prompts:
+                eng.submit(p, max_new_tokens=new)
+            while eng.pending:
+                eng.step()
+            parks = 0
+            ts = []
+            while (eng.active or eng.preempted) and len(ts) < 2000:
+                # deterministic churn: frac% of ticks open with a
+                # forced eviction of the most-progressed request
+                if frac and eng.active and (len(ts) % 10) < frac // 10:
+                    victim = max(eng.active.values(),
+                                 key=lambda r: len(r.out_tokens))
+                    if victim.out_tokens:
+                        eng.preempt(victim.rid)
+                        parks += 1
+                t0 = timer.perf_counter()
+                eng.step()
+                ts.append(timer.perf_counter() - t0)
+            press = eng.pressure_stats()
+            stats[prefetch] = (float(np.median(ts)) * 1e6, parks, press)
+        us_on, parks, press = stats["on"]
+        us_off = stats["off"][0]
+        emit(f"decode_step/tiered/park{frac}", us_on,
+             f"park={frac}%;parks={parks};spills={press['spills']};"
+             f"promotes={press['promotes']};"
+             f"prefetch_off_us={us_off:.1f}")
 
 
 def _paged_2d_occupancy_rows(H, K, D) -> None:

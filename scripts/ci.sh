@@ -21,6 +21,11 @@
 #                            # >= 2x fewer prefill calls and pinned
 #                            # blocks vs the reuse-off oracle, zero
 #                            # divergence, zero leaked refcounts
+#   scripts/ci.sh --spill    # multi-tier lane: seeded eviction churn
+#                            # parking KV in the host tier, asserting
+#                            # more resident KV than the HBM pool holds,
+#                            # zero token divergence, zero leaks in
+#                            # either tier
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -40,6 +45,14 @@ if [[ "${1:-}" == "--prefix" ]]; then
     python scripts/serve_smoke.py --prefix --seed 0
     python scripts/serve_smoke.py --prefix --seed 1
     echo "CI OK (prefix)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--spill" ]]; then
+    echo "== spill lane: host-tier park/promote churn (seeds 0, 1) =="
+    python scripts/serve_smoke.py --spill --seed 0
+    python scripts/serve_smoke.py --spill --seed 1
+    echo "CI OK (spill)"
     exit 0
 fi
 

@@ -29,7 +29,15 @@ Three modes:
   between the two (the off run is the private-block oracle), a **>= 2x
   reduction** in both prefill calls and freshly pinned blocks from
   trie-matched admission, and **zero leaked refcounts** after drain
-  (pool whole, no shared blocks, empty trie).
+  (pool whole, no shared blocks, empty trie);
+* ``--spill [--seed N]`` — multi-tier residency soak: the plan's tier
+  split backs the HBM pool with a host-DRAM pool, and seeded churn
+  (more sessions than slots + forced mid-decode evictions) parks
+  victims' KV host-side, asserting the two tiers together hold **more
+  resident KV than the whole HBM pool**, more live sessions than the
+  slot count, **zero token divergence** vs the uninterrupted oracles,
+  promotion-based resume (spills and promotes both fire), and **zero
+  leaked blocks in either tier**.
 """
 
 import argparse
@@ -210,6 +218,103 @@ def prefix(seed: int) -> int:
     return 0
 
 
+def spill(seed: int) -> int:
+    """Multi-tier residency soak: host DRAM behind the HBM block pool.
+
+    The decode plan's tier split sizes a small HBM pool plus a host
+    pool; seeded churn (three sessions per slot, forced mid-decode
+    evictions) makes victims park their KV host-side and resume by
+    promotion.  At peak the resident KV across both tiers must exceed
+    the whole HBM pool — the capacity the host tier exists to buy —
+    while every request stays token-identical to its uninterrupted
+    single-request oracle and both tiers drain whole."""
+    arch = get_arch("qwen3-8b").reduced()
+    shape = ShapeConfig("serve_spill", "decode", 64, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    est = plan.estimates
+    assert est.get("kv_residency") == "paged"
+    assert est.get("kv_tier_split") == "hbm+host", est.get("kv_tier_split")
+    assert est.get("kv_host_blocks", 0) > 0, est
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, arch.vocab_size, (plen,)).astype(np.int32)
+               for plen in (5, 11, 8, 14, 6, 12, 9, 13)]
+    new_tokens = [30, 24, 36, 28, 32, 22, 34, 26]
+
+    # uninterrupted single-request oracles through the same plan
+    want = []
+    for p, mnt in zip(prompts, new_tokens):
+        ref = ServeEngine.from_plan(plan, params, arch=arch, max_batch=1)
+        ref.submit(p, max_new_tokens=mnt)
+        want.append(ref.run_until_idle(max_ticks=256)[0].out_tokens)
+
+    # grant admission (the documented ops hatch on this worst-case
+    # pool): mid-decode growth is what makes eviction pressure real
+    eng = ServeEngine.from_plan(
+        plan, params, arch=arch, kv_admission="grant",
+        preemption=PreemptionPolicy(max_preemptions=64,
+                                    backoff_base_ticks=2,
+                                    backoff_cap_ticks=4))
+    assert eng.kv_tiering and eng.host_blocks > 0, "plan tiering lost"
+    hbm_total = eng.block_stats()["total"]
+    for p, mnt in zip(prompts, new_tokens):
+        eng.submit(p, max_new_tokens=mnt)
+
+    churn = random.Random(seed)
+    forced = peak_sessions = peak_resident = ticks = 0
+    while (eng.pending or eng.active or eng.preempted) and ticks < 1000:
+        # evict whoever is deepest into decode: the hardest state to
+        # round-trip through the host tier (longest retained KV)
+        deep = [r for r in eng.active.values() if len(r.out_tokens) >= 12]
+        if deep and forced < 10 and churn.random() < 0.45:
+            victim = max(deep, key=lambda r: len(r.out_tokens))
+            eng.preempt(victim.rid)
+            forced += 1
+        eng.step()
+        st = eng.block_stats()
+        parked = sum(1 for q in eng.preempted
+                     if q.parked_state is not None)
+        peak_sessions = max(peak_sessions, len(eng.active) + parked)
+        peak_resident = max(peak_resident,
+                            st["in_use"] + st["host_in_use"])
+        ticks += 1
+
+    done = eng.finished
+    assert not eng.shed, \
+        f"spill churn shed {len(eng.shed)}: {[r.error for r in eng.shed]}"
+    assert len(done) == len(prompts), (len(done), len(prompts))
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for i, (p, w) in enumerate(zip(prompts, want)):
+        assert got[p.tobytes()] == w, (
+            f"TOKEN DIVERGENCE on request {i}: {got[p.tobytes()]} != {w}")
+    for r in done:
+        assert not r.blocks, f"finished rid {r.rid} still holds blocks"
+    press = eng.pressure_stats()
+    assert forced >= 1 and press["preemptions"] >= forced
+    assert press["spills"] >= 1 and press["promotes"] >= 1, press
+    assert peak_sessions > eng.max_batch, (
+        f"host tier never carried extra sessions: peak {peak_sessions} "
+        f"<= {eng.max_batch} slots")
+    assert peak_resident > hbm_total, (
+        f"resident KV never exceeded the HBM pool: peak {peak_resident} "
+        f"<= {hbm_total} blocks — the host tier bought no capacity")
+    eng.drop_block_cache()
+    st = eng.block_stats()
+    assert st["free"] == st["total"], f"HBM blocks leaked: {st}"
+    assert st["host_free"] == st["host_total"], f"host blocks leaked: {st}"
+    print(f"serve spill OK (seed {seed}): {len(done)} requests "
+          f"token-identical under {forced} forced evictions "
+          f"({press['spills']} spills, {press['promotes']} promotes, "
+          f"{press['preemptions']} preemptions); peak {peak_sessions} "
+          f"live sessions on {eng.max_batch} slots, peak "
+          f"{peak_resident} resident blocks vs {hbm_total} HBM "
+          f"(+{eng.host_blocks} host); both tiers whole at idle")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
@@ -223,13 +328,21 @@ def main() -> int:
                          "traffic asserting >= 2x fewer prefill calls "
                          "and pinned blocks vs the reuse-off oracle, "
                          "zero divergence, zero leaked refcounts")
+    ap.add_argument("--spill", action="store_true",
+                    help="multi-tier residency soak: host-DRAM spill + "
+                         "promote under seeded eviction churn, asserting "
+                         "more resident KV than the HBM pool holds, zero "
+                         "divergence, zero leaks in either tier")
     ap.add_argument("--seed", type=int, default=0,
-                    help="traffic seed (chaos denials / prefix sessions)")
+                    help="traffic seed (chaos denials / prefix sessions "
+                         "/ spill churn)")
     args = ap.parse_args()
     if args.chaos:
         return chaos(args.seed)
     if args.prefix:
         return prefix(args.seed)
+    if args.spill:
+        return spill(args.seed)
 
     # kv_heads=1 on a (model=2) plan mesh -> seq spill -> shard_map_flash
     arch = dataclasses.replace(get_arch("qwen3-8b").reduced(), n_kv_heads=1)

@@ -365,6 +365,88 @@ def kv_block_geometry(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class KVTierSplit:
+    """Two-tier residency split for the paged KV pool.
+
+    The paper's template is *multi-level*: a specialized memory is not
+    one pool but a hierarchy sized per tier.  For the serving KV cache
+    the tiers are the HBM block pool (the :class:`KVBlockGeometry` the
+    pass already sized from HBM headroom) plus a **host-DRAM spill
+    pool** behind it, sized here from the host pin budget.  Cold blocks
+    (parked sessions, evicted prefix-trie tails) move to the host tier
+    and stream back over PCIe ahead of their decode tick.
+
+    ``prefetch_feasible`` is the stream-back-latency check: a decoding
+    slot crosses a block boundary once every ``block_len`` ticks, so a
+    one-block-lookahead prefetch hides the PCIe transfer exactly when
+    one block streams in less than ``lookahead_ticks`` decode ticks.
+    Infeasible does not disable the tier — parked sessions still resume
+    from host — it means a resume may stall a tick on the transfer.
+    """
+
+    hbm_blocks: int                # HBM pool capacity (== geometry n_blocks)
+    host_blocks: int               # host spill pool capacity (0 = hbm-only)
+    block_bytes: int               # one block, k+v, all layers
+    pcie_bw: float                 # host<->HBM stream bandwidth (bytes/s)
+    decode_tick_s: float           # modeled steady-state decode tick
+    lookahead_ticks: int           # ticks between one slot's boundary crossings
+
+    @property
+    def stream_block_s(self) -> float:
+        """PCIe time to move one block (k+v rows, every layer)."""
+        if self.pcie_bw <= 0:
+            return float("inf")
+        return self.block_bytes / self.pcie_bw
+
+    @property
+    def prefetch_feasible(self) -> bool:
+        return self.stream_block_s <= self.lookahead_ticks * self.decode_tick_s
+
+    @property
+    def host_bytes(self) -> int:
+        return self.host_blocks * self.block_bytes
+
+    @property
+    def tier_name(self) -> str:
+        return "hbm+host" if self.host_blocks else "hbm-only"
+
+
+def kv_tier_split(
+    geo: KVBlockGeometry,
+    host_budget_bytes: float,
+    pcie_bw: float,
+    decode_tick_s: float,
+    max_park_factor: int = 8,
+) -> KVTierSplit:
+    """Size the host-DRAM spill tier behind an already-sized HBM pool.
+
+    ``geo`` carries the HBM side of the split (sized from HBM headroom
+    by :func:`kv_block_geometry`); this sizes the host side from the
+    pin budget (the host DRAM the deployment may pin for DMA), capped
+    at ``max_park_factor`` times the HBM pool — parking depth beyond a
+    few full pools buys nothing but pinned pages the OS cannot reclaim.
+    A host pool too small to park even one full sequence is reported as
+    0 (hbm-only): spilling a session you can never fully park only
+    fragments the tier.
+    """
+    block_bytes = geo.paged_bytes // max(1, geo.n_blocks)
+    host = 0
+    if block_bytes > 0 and host_budget_bytes > 0:
+        host = int(host_budget_bytes // block_bytes)
+        host = min(host, max_park_factor * geo.n_blocks)
+    if host < geo.blocks_per_seq:
+        host = 0
+    return KVTierSplit(
+        hbm_blocks=geo.n_blocks,
+        host_blocks=host,
+        block_bytes=block_bytes,
+        pcie_bw=pcie_bw,
+        decode_tick_s=decode_tick_s,
+        lookahead_ticks=geo.block_len,
+    )
+
+
 # ---------------------------------------------------------------------------
 # VMEM tiling model (local partitioning pass)
 # ---------------------------------------------------------------------------

@@ -20,7 +20,8 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.core.costmodel import (MeshModel, bytes_per_device,
-                                  kv_block_geometry, shard_factor)
+                                  kv_block_geometry, kv_tier_split,
+                                  shard_factor)
 from repro.core.ir import MemorySpace, Role, TensorDecl
 from repro.core.passes import Pass, PassContext
 
@@ -274,10 +275,54 @@ class DataOrganizationPass(Pass):
                 f"({shape.global_batch}x{geo.blocks_per_seq} blocks) — "
                 "reserving full budgets at admission costs nothing and "
                 "mid-decode grants can never fail")
+        # multi-tier residency: size the host-DRAM spill pool behind the
+        # HBM pool (the template specialized *across* tiers, not within
+        # one).  The decode tick is modeled memory-bound — params plus
+        # the per-chip pool read once per token — and the stream-back
+        # check asks whether one block crosses PCIe inside the
+        # block_len ticks between a slot's block-boundary crossings
+        # (the engine's one-tick-lookahead prefetch window).
+        n_chips = dsize * msize
+        pin_frac = float(ctx.options.get("kv_host_pin_frac", 0.5))
+        tick_s = ctx.target.hbm_time(persistent + geo.paged_bytes / n_chips)
+        split = kv_tier_split(
+            geo,
+            host_budget_bytes=ctx.target.host_bytes_per_chip
+            * n_chips * pin_frac,
+            pcie_bw=ctx.target.pcie_bw,
+            decode_tick_s=tick_s)
+        plan.estimates["kv_tier_split"] = split.tier_name
+        plan.estimates["kv_host_blocks"] = split.host_blocks
+        plan.estimates["kv_host_bytes"] = float(split.host_bytes)
+        plan.estimates["kv_stream_block_us"] = split.stream_block_s * 1e6
+        plan.estimates["kv_decode_tick_us"] = split.decode_tick_s * 1e6
+        plan.estimates["kv_prefetch"] = (
+            "on" if split.prefetch_feasible else "off")
+        if split.host_blocks:
+            feas = ("feasible" if split.prefetch_feasible
+                    else "NOT feasible (resumes may stall a tick on PCIe)")
+            self.record(
+                ctx, "kv_tier_split", split.tier_name,
+                f"host pin budget ({pin_frac:.0%} of "
+                f"{ctx.target.host_bytes_per_chip * n_chips / 2**30:.0f} "
+                f"GiB) backs {split.host_blocks} spill block(s) behind "
+                f"the {split.hbm_blocks}-block HBM pool; cold blocks "
+                "(parked sessions, evicted prefix tails) park on host "
+                f"and stream back at {ctx.target.pcie_bw / 1e9:.0f} GB/s "
+                f"— one block in {split.stream_block_s * 1e6:.0f} us vs "
+                f"a {split.lookahead_ticks}-tick boundary interval of "
+                f"{split.lookahead_ticks * tick_s * 1e6:.0f} us, so "
+                f"one-tick-lookahead prefetch is {feas}")
+        else:
+            self.record(
+                ctx, "kv_tier_split", "hbm-only",
+                "host pin budget cannot park even one full sequence "
+                f"({split.block_bytes} B/block x {geo.blocks_per_seq} "
+                "blocks/seq) — spilling a session that can never fully "
+                "park only fragments the tier")
         for t in ctx.ir.by_role(Role.KV_CACHE):
             plan.placement(t.name).layout["kv_residency"] = "paged"
             plan.placement(t.name).decided_by.append(self.name + ":paged")
-        n_chips = dsize * msize
         self.record(
             ctx, "kv_residency",
             f"paged block_len={geo.block_len} n_blocks={geo.n_blocks} "

@@ -41,6 +41,15 @@ class TpuTarget:
     ici_links_per_chip: int = 4      # 2D torus on v5e: 4 links
     dcn_bw: float = 6.25e9           # bytes/s per host NIC (pod axis, 50 Gb/s)
 
+    # --- host tier (the DRAM behind the PCIe attach) ---
+    # The serving engine can spill cold KV blocks to pinned host memory
+    # and stream them back ahead of their decode tick; these two numbers
+    # size that tier.  ``host_bytes_per_chip`` is each chip's share of
+    # the host's DRAM (a v5e host serves 8 chips), ``pcie_bw`` the
+    # per-chip host<->HBM DMA bandwidth the stream-back must fit in.
+    pcie_bw: float = 16e9            # bytes/s per chip (PCIe Gen3 x16 class)
+    host_bytes_per_chip: int = 48 * GiB
+
     # --- derived helpers -------------------------------------------------
     def matmul_time(self, flops: float, dtype_bytes: int = 2) -> float:
         peak = self.peak_bf16_flops if dtype_bytes <= 2 else self.peak_f32_flops
@@ -52,6 +61,10 @@ class TpuTarget:
     def ici_time(self, nbytes: float) -> float:
         """Time to move nbytes across one ICI link."""
         return nbytes / self.ici_link_bw
+
+    def pcie_time(self, nbytes: float) -> float:
+        """Time to stream nbytes between host DRAM and HBM."""
+        return nbytes / self.pcie_bw
 
     def align_up(self, n: int, q: int | None = None) -> int:
         q = q or self.mxu_dim
@@ -79,6 +92,8 @@ _TARGETS = {
         ici_link_bw=100e9,
         ici_links_per_chip=6,  # 3D torus
         vmem_bytes=128 * MiB,
+        pcie_bw=32e9,
+        host_bytes_per_chip=96 * GiB,
     ),
 }
 

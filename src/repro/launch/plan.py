@@ -59,7 +59,22 @@ def _load(store: planstore.PlanStore, path: Path) -> FrozenPlan:
 _DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
                   "kv_n_blocks", "kv_admission", "kv_preempt_headroom",
                   "kv_prefix_reuse", "kv_prefix_hit_headroom",
+                  "kv_tier_split", "kv_host_blocks", "kv_prefetch",
                   "moe_impl", "grad_compression")
+
+
+def _decisions(plan: FrozenPlan) -> dict:
+    """Decision summary, schema-tolerant across artifact generations.
+
+    Plans stored before the multi-tier refactor never recorded a
+    ``kv_tier_split`` — their paged pools *were* single-tier, so render
+    them as ``hbm-only`` instead of dropping the field (or raising on a
+    reader that assumes it exists)."""
+    dec = {k: plan.estimates[k] for k in _DECISION_KEYS
+           if k in plan.estimates}
+    if dec.get("kv_residency") == "paged" and "kv_tier_split" not in dec:
+        dec["kv_tier_split"] = "hbm-only"
+    return dec
 
 
 def _dims(p: FrozenPlan) -> str:
@@ -79,8 +94,7 @@ def cmd_list(plan_dir: Path, store: planstore.PlanStore) -> int:
         if plan is None:
             print(f"{f.stem[:12]:<14} <corrupt or stale-schema entry>")
             continue
-        dec = ";".join(f"{k}={plan.estimates[k]}" for k in _DECISION_KEYS
-                       if k in plan.estimates)
+        dec = ";".join(f"{k}={v}" for k, v in _decisions(plan).items())
         print(f"{plan.content_hash()[:12]:<14} {plan.arch:<28} "
               f"{plan.shape:<14} {_dims(plan):<36} {dec}")
     return 0
@@ -96,8 +110,7 @@ def cmd_show(plan_dir: Path, store: planstore.PlanStore, prefix: str,
           f"comm={plan.comm.grad_schedule}"
           f"{'+int8_ef' if plan.comm.compresses_gradients else ''} "
           f"remat={plan.comm.remat_policy}")
-    dec = {k: plan.estimates[k] for k in _DECISION_KEYS
-           if k in plan.estimates}
+    dec = _decisions(plan)
     if dec:
         print("  decisions: " + json.dumps(dec, default=str))
     print(f"  placements={len(plan.placements)} "

@@ -31,6 +31,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.describe import global_layer_mask
@@ -561,6 +562,44 @@ def init_paged_cache(arch: ArchConfig, batch_size: int, max_len: int,
              Hs * arch.ssm_head_dim + 2 * arch.ssm_n_groups * arch.ssm_state),
             jnp.bfloat16)
     return cache
+
+
+def init_host_pool(arch: ArchConfig, n_host_blocks: int, block_len: int,
+                   dtype=jnp.bfloat16, kv_heads: int = 0
+                   ) -> Dict[str, np.ndarray]:
+    """Host-DRAM spill tier behind the paged pool (``kv_tier_split``).
+
+    Same per-block row layout as the device pools — ``k``/``v`` are
+    ``(L, host_blocks, block_len, K, hd)`` — but held as **numpy**
+    arrays: host memory by construction, never part of a jit graph, so
+    a spilled block costs HBM nothing.  Blocks migrate between the two
+    pools with :func:`gather_blocks` / :func:`scatter_blocks` (one
+    batched gather or scatter per transfer; the host->device leg is the
+    ``jax.device_put`` the engine's prefetch stages a tick early).
+    The dtype matches the device pool exactly (bf16 via ml_dtypes), so
+    a spill/promote round trip is bit-identical — the token-identity
+    tests lean on that.
+    """
+    K, hd = kv_heads or arch.n_kv_heads, arch.hd
+    L = arch.n_layers
+    shape = (L, n_host_blocks, block_len, K, hd)
+    return {"k": np.zeros(shape, dtype=np.dtype(dtype)),
+            "v": np.zeros(shape, dtype=np.dtype(dtype))}
+
+
+def gather_blocks(pool: jax.Array, ids: jax.Array) -> jax.Array:
+    """Pull whole blocks out of a ``(L, n_blocks, block_len, K, hd)``
+    pool as ``(L, len(ids), block_len, K, hd)`` rows — one batched
+    gather, the device half of a block migration (spill reads, promote
+    scatter-writes).  Jit-friendly: the engine wraps it once."""
+    return pool[:, ids]
+
+
+def scatter_blocks(pool: jax.Array, ids: jax.Array,
+                   rows: jax.Array) -> jax.Array:
+    """Write whole blocks back into a pool — the inverse of
+    :func:`gather_blocks`, one batched scatter."""
+    return pool.at[:, ids].set(rows)
 
 
 def append_kv_paged(pool: jax.Array, new: jax.Array, pos: jax.Array,

@@ -80,6 +80,40 @@ blocks and victim selection prefers requests pinning the fewest —
 and trie entries are pruned exactly when their blocks return to the
 free list.
 
+Residency is **multi-tier** when the plan sized a host spill pool
+(``kv_tier_split`` / ``kv_host_blocks``): behind the HBM block pool
+sits a host-DRAM pool (:func:`repro.models.lm.init_host_pool`, plain
+numpy — host memory by construction) and every block carries an
+explicit tier (``BlockAllocator.tier_of``).  Three mechanisms ride on
+it:
+
+1. **Cold-block spill.**  Blocks that would be freed but are still
+   prefix-trie-indexed are retained as a block *cache* (refcount held
+   by the engine); under low-water pressure the spill scheduler moves
+   them to the host tier — and drops them only when the host pool is
+   full too — so the reclaim ladder gets a rung *before* grant →
+   migrate → preempt → shed ever fires.  Trie entries survive the
+   spill tier-tagged (``PrefixCache.rekey``): a prefix hit on a
+   spilled block **promotes** it back into the slot's sub-pool instead
+   of missing.
+2. **Park-with-state.**  Preemption's host-side park is unified with
+   the tier: a victim's KV blocks spill to host (and its SSM/conv
+   rows are saved host-side) instead of being discarded, so
+   re-admission *promotes the blocks back and skips re-prefill
+   entirely* — token-identical resume with zero recompute.  Shared
+   blocks pin a victim in the legacy path (release + re-prefill):
+   sharers' tables point at the old ids.
+3. **Async prefetch.**  Re-admission is known one tick ahead (the
+   backoff expiry), so the engine stages the host->device transfer
+   (``jax.device_put``) for tick ``T`` during tick ``T-1`` — double
+   buffered: the decode of one tick overlaps the stream-in for the
+   next, keyed off the parked slot's next block-boundary crossing.
+   With ``kv_prefetch="off"`` the transfer happens synchronously at
+   resume (the stall the benchmark rows measure).
+
+With tiering off (``kv_host_blocks=0``, the default) every path keeps
+its exact pre-tier semantics.
+
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
 from the on-disk plan store in a different process) and derives the KV
@@ -96,7 +130,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -189,10 +223,18 @@ class PreemptionPolicy:
 class PreemptedRequest:
     """Host-side parking spot for an evicted request: the tokens
     generated so far stay on the request; its KV is rebuilt by
-    re-prefill at ``not_before_tick`` (exponential backoff)."""
+    re-prefill at ``not_before_tick`` (exponential backoff) — unless
+    ``parked_state`` is set (tiered park): then the KV blocks live on
+    in the host tier (ids in ``request.blocks``) with SSM/conv rows
+    saved alongside, and re-admission promotes instead of
+    re-prefilling."""
 
     request: Request
     not_before_tick: int
+    # tiered park: {"slot_len": int, "kv_host": [host ids]} for paged
+    # KV, {"kv_rows": (k, v)} for dense stripes, plus "ssm"/"conv"
+    # host copies when the arch carries them
+    parked_state: Optional[Dict[str, Any]] = None
 
 
 class ServeEngine:
@@ -202,6 +244,7 @@ class ServeEngine:
                  kv_residency: str = "dense", kv_block_len: int = 0,
                  kv_n_blocks: int = 0, kv_admission: str = "reserve",
                  kv_pool_groups: int = 0, kv_prefix_reuse: str = "on",
+                 kv_host_blocks: int = 0, kv_prefetch: str = "on",
                  preemption: Optional[PreemptionPolicy] = None):
         if kv_admission not in ("reserve", "grant"):
             raise ValueError(
@@ -211,6 +254,12 @@ class ServeEngine:
             raise ValueError(
                 f"kv_prefix_reuse must be 'on' or 'off', "
                 f"got {kv_prefix_reuse!r}")
+        if kv_prefetch not in ("on", "off"):
+            raise ValueError(
+                f"kv_prefetch must be 'on' or 'off', got {kv_prefetch!r}")
+        if kv_host_blocks < 0:
+            raise ValueError(
+                f"kv_host_blocks must be >= 0, got {kv_host_blocks}")
         self.arch, self.params, self.cfg = arch, params, cfg
         self.plan = None               # set by from_plan()
         self.max_batch, self.max_len = max_batch, max_len
@@ -274,10 +323,23 @@ class ServeEngine:
                 groups = kv_pool_groups
             self.n_blocks = n
             self.pool_groups = groups
+            # host spill tier (the plan's kv_tier_split): a second pool
+            # of host-DRAM blocks behind the HBM pool.  Clamped like
+            # n_blocks — a plan sized for a bigger deployment must not
+            # balloon a small engine's host pin — to a park depth of 8
+            # full worst-case batches (past that, parked sessions wait
+            # on slots, not on host bytes).
+            self.host_blocks = min(kv_host_blocks, 8 * cap) \
+                if kv_host_blocks > 0 else 0
             self.cache = lm.init_paged_cache(
                 arch, max_batch, max_len, self.block_len, self.n_blocks,
                 ssm_heads=ssm_heads, kv_heads=kv_heads)
-            self._alloc = BlockAllocator(self.n_blocks, groups)
+            self._alloc = BlockAllocator(self.n_blocks, groups,
+                                         host_blocks=self.host_blocks)
+            self._host = (lm.init_host_pool(arch, self.host_blocks,
+                                            self.block_len,
+                                            kv_heads=kv_heads)
+                          if self.host_blocks else None)
             # cross-request prefix reuse: one trie per sub-pool (a match
             # in a foreign sub-pool would break the combine contract)
             self.kv_prefix_reuse = kv_prefix_reuse == "on"
@@ -287,12 +349,31 @@ class ServeEngine:
             from repro.serve.allocator import BlockAllocator
             self.block_len = 0
             self.n_blocks = 0
+            self.host_blocks = 0
             self.pool_groups = 1
             self.cache = lm.init_cache(arch, max_batch, max_len,
                                        ssm_heads=ssm_heads, kv_heads=kv_heads)
             self._alloc = BlockAllocator(0, 1)
+            self._host = None
             self.kv_prefix_reuse = False
             self._prefix = None
+        # tiered residency: host-side park of KV blocks (paged), dense
+        # stripes, and SSM/conv rows — enables no-re-prefill resume.
+        # Dense/SSM engines park per-slot state without a block pool.
+        self.kv_tiering = kv_host_blocks > 0
+        self.kv_prefetch = kv_prefetch == "on"
+        # engine-held block cache: blocks a release would have freed
+        # but that the prefix trie still indexes (refcount 1, held
+        # here).  Insertion-ordered — the spill scheduler works
+        # oldest-first.  Only populated with tiering on.
+        self._cached: Dict[int, None] = {}
+        # prefetch staging: rid -> (host id tuple, k rows, v rows) put
+        # on device one tick before the parked request's re-admission
+        self._staged: Dict[int, Any] = {}
+        # admission-scoped map of promoted ids (old host id -> new HBM
+        # id) so a second request matching the same just-promoted block
+        # follows it instead of aliasing a freed host id
+        self._promo_map: Dict[int, int] = {}
         # matched tokens' prefill compute is only skippable when the
         # whole per-token state is attention KV; an SSM/hybrid state
         # depends on every prefix token, so those archs alias blocks
@@ -348,6 +429,10 @@ class ServeEngine:
                 k.at[:, new].set(k[:, old]),
                 v.at[:, new].set(v[:, old]),
                 tbl.at[slot, col].set(new)))
+        # tier migration: batched whole-block gather/scatter between
+        # the device pool and the host spill pool
+        self._gather_blocks = jax.jit(lm.gather_blocks)
+        self._scatter_blocks = jax.jit(lm.scatter_blocks)
 
     # ------------------------------------------------------------------
     @property
@@ -389,6 +474,8 @@ class ServeEngine:
                   max_len: Optional[int] = None, seed: int = 0,
                   kv_admission: Optional[str] = None,
                   kv_prefix_reuse: Optional[str] = None,
+                  kv_host_blocks: Optional[int] = None,
+                  kv_prefetch: Optional[str] = None,
                   preemption: Optional[PreemptionPolicy] = None
                   ) -> "ServeEngine":
         """Build an engine from the frozen plan artifact.
@@ -469,6 +556,12 @@ class ServeEngine:
                   kv_prefix_reuse=(
                       kv_prefix_reuse if kv_prefix_reuse is not None
                       else str(plan.estimates.get("kv_prefix_reuse", "on"))),
+                  kv_host_blocks=(
+                      kv_host_blocks if kv_host_blocks is not None
+                      else int(plan.estimates.get("kv_host_blocks", 0))),
+                  kv_prefetch=(
+                      kv_prefetch if kv_prefetch is not None
+                      else str(plan.estimates.get("kv_prefetch", "on"))),
                   preemption=preemption)
         eng.plan = plan
         if mesh is not None:
@@ -570,13 +663,16 @@ class ServeEngine:
         return self._blocks_needed(len(r.prompt), r.max_new_tokens)
 
     def block_stats(self) -> Dict[str, int]:
-        """Pool accounting (``free + in_use`` always equals ``total``;
-        dense engines report an empty 0-block pool).  ``shared`` counts
-        resident blocks with more than one holder; ``prefix_trie`` the
-        blocks the prefix cache currently indexes."""
+        """Pool accounting (``free + in_use`` always equals ``total``
+        per tier; dense engines report an empty 0-block pool).
+        ``shared`` counts resident blocks with more than one holder;
+        ``prefix_trie`` the blocks the prefix cache currently indexes;
+        ``cached`` the engine-held cold blocks (trie-retained, either
+        tier) the spill scheduler may reclaim at will."""
         st = self._alloc.stats()
         st["prefix_trie"] = (len(self._prefix)
                              if self._prefix is not None else 0)
+        st["cached"] = len(self._cached)
         return st
 
     def pressure_stats(self) -> Dict[str, Any]:
@@ -600,7 +696,10 @@ class ServeEngine:
                 "prefix_trie": (len(self._prefix)
                                 if self._prefix is not None else 0),
                 "prefix_rides": self.prefix_rides,
-                "cow_copies": self.cow_copies}
+                "cow_copies": self.cow_copies,
+                "spills": self._alloc.spills,
+                "promotes": self._alloc.promotes,
+                "cached_blocks": len(self._cached)}
 
     def _recent_preemptions(self) -> int:
         lo = self.tick - self.preemption.shed_window_ticks
@@ -684,10 +783,176 @@ class ServeEngine:
     def _release_blocks(self, blocks: List[int]) -> None:
         """Drop one holder reference per block; prune trie entries for
         the blocks that actually left the pool (a freed id's next
-        tenant writes unrelated rows)."""
+        tenant writes unrelated rows).
+
+        With tiering on, a block whose *last* holder is releasing but
+        which the prefix trie still indexes is not freed — the engine
+        keeps the reference and parks the id in its cold-block cache
+        (``_cached``), a page-cache bet: the content costs nothing
+        until pressure, and a future admission with the same prefix
+        aliases it instead of re-prefilling.  The spill scheduler
+        (:meth:`_spill_cold`) reclaims cached blocks on demand — spill
+        to host first, drop outright only when the host tier is full
+        too."""
+        if self.kv_tiering and self._prefix is not None:
+            kept = []
+            for b in blocks:
+                if self._alloc.refcount(b) == 1 \
+                        and self._prefix.has_block(b) \
+                        and b not in self._cached:
+                    self._cached[b] = None
+                else:
+                    kept.append(b)
+            blocks = kept
+        if not blocks:
+            return
         freed = self._alloc.release(blocks)
         if self._prefix is not None and freed:
             self._prefix.evict(freed)
+
+    # ---------------- tier transitions + spill scheduler --------------
+    def _spill_rows(self, pairs: List[Tuple[int, int]]) -> None:
+        """Copy the k/v rows of just-spilled blocks into the host pool
+        (one batched device→host gather per tensor).  The vacated HBM
+        ids are already back on their free lists, but their rows stay
+        intact until a next tenant writes — the copy races nothing."""
+        old_ids = jnp.asarray(np.asarray([b for b, _ in pairs], np.int32))
+        idx = np.asarray([h - self.n_blocks for _, h in pairs], np.int64)
+        self._host["k"][:, idx] = np.asarray(
+            self._gather_blocks(self.cache["k"], old_ids))
+        self._host["v"][:, idx] = np.asarray(
+            self._gather_blocks(self.cache["v"], old_ids))
+
+    def _promote_rows(self, pairs: List[Tuple[int, int]],
+                      k_rows=None, v_rows=None) -> None:
+        """Copy spilled k/v rows back into the device pool at the
+        pairs' new HBM ids — from the prefetcher's staged device arrays
+        when they landed, else a synchronous host→device transfer (the
+        stall ``kv_prefetch="off"`` benchmarks)."""
+        idx = np.asarray([h - self.n_blocks for h, _ in pairs], np.int64)
+        new_ids = jnp.asarray(np.asarray([b for _, b in pairs], np.int32))
+        if k_rows is None:
+            k_rows = jnp.asarray(self._host["k"][:, idx])
+            v_rows = jnp.asarray(self._host["v"][:, idx])
+        self.cache["k"] = self._scatter_blocks(self.cache["k"], new_ids,
+                                               k_rows)
+        self.cache["v"] = self._scatter_blocks(self.cache["v"], new_ids,
+                                               v_rows)
+
+    def _promote_matched(self, matched: List[int],
+                         group: int) -> List[int]:
+        """Resolve a matched block list to decode-ready HBM ids — the
+        hit-after-spill path.  Ids another request promoted earlier in
+        this same admission pass are followed through ``_promo_map``
+        (their host ids are already back on the host free list); any
+        still-host-resident block is promoted into ``group`` now: rows
+        copied back, trie and cold-cache entries re-keyed.  Placement
+        already budgeted the draws (:meth:`_hbm_matched`)."""
+        if not self.kv_tiering or not matched:
+            return list(matched)
+        out = [self._promo_map.get(b, b) for b in matched]
+        host_ids = [b for b in out if self._alloc.tier_of(b) == "host"]
+        if not host_ids:
+            return out
+        pairs = self._alloc.promote(host_ids, group)
+        assert pairs is not None, "placement budgeted the promote draw"
+        self._promote_rows(pairs)
+        self._prefix.rekey(pairs, "hbm")
+        for old, new in pairs:
+            if old in self._cached:
+                del self._cached[old]
+                self._cached[new] = None
+            self._promo_map[old] = new
+        trans = dict(pairs)
+        return [trans.get(b, b) for b in out]
+
+    def _evict_cached_host(self, n: int) -> int:
+        """Drop up to ``n`` oldest engine-cached *host*-tier blocks
+        outright (free the ids, prune the trie) — the host pool's own
+        reclamation, run when a spill or a park finds it full."""
+        victims = [b for b in self._cached
+                   if self._alloc.tier_of(b) == "host"][:n]
+        for b in victims:
+            del self._cached[b]
+            freed = self._alloc.release([b])
+            if self._prefix is not None and freed:
+                self._prefix.evict(freed)
+        return len(victims)
+
+    def _spill_cold(self, group: int, need: int) -> int:
+        """The reclaim rung *before* the grant → migrate → preempt →
+        shed ladder: free up to ``need`` HBM blocks in ``group`` by
+        moving the engine's oldest cached (cold, trie-retained) blocks
+        to the host tier.  Cold-block selection is insertion order over
+        ``_cached`` — exactly the blocks idle sessions, evicted trie
+        tails, and fully-decoded prompts left behind, oldest first.
+        When the host pool is full the oldest cached host block is
+        evicted to make room; when there is no host room at all the
+        cold block is dropped outright (it was a cache — the content
+        is reconstructible by re-prefill).  Blocks an admission has
+        since aliased (refcount > 1) are pinned: an active table points
+        at them.  Returns the number of HBM blocks actually freed."""
+        if not self.kv_tiering:
+            return 0
+        freed = 0
+        while freed < need:
+            cand = next((b for b in self._cached
+                         if b < self.n_blocks
+                         and self._alloc.group_of(b) == group
+                         and self._alloc.refcount(b) == 1), None)
+            if cand is None:
+                break
+            if self._alloc.host_free == 0:
+                self._evict_cached_host(1)
+            if self._alloc.host_free > 0:
+                pairs = self._alloc.spill([cand])
+                assert pairs is not None, "host headroom was just checked"
+                self._spill_rows(pairs)
+                self._prefix.rekey(pairs, "host")
+                del self._cached[cand]
+                self._cached[pairs[0][1]] = None
+            else:
+                del self._cached[cand]
+                fr = self._alloc.release([cand])
+                if self._prefix is not None and fr:
+                    self._prefix.evict(fr)
+            freed += 1
+        return freed
+
+    def spill_cached(self, group: Optional[int] = None) -> int:
+        """Force-spill every unpinned cached HBM block to the host tier
+        (test/ops hook: drives the hit-after-spill path without real
+        pool pressure).  Returns the number of blocks spilled."""
+        total = 0
+        gs = range(self.pool_groups) if group is None else [group]
+        for g in gs:
+            n = sum(1 for b in self._cached
+                    if b < self.n_blocks and self._alloc.group_of(b) == g
+                    and self._alloc.refcount(b) == 1)
+            total += self._spill_cold(g, n)
+        return total
+
+    def drop_block_cache(self) -> int:
+        """Release every engine-cached cold block (both tiers) and
+        prune their trie entries — the test/ops hook that restores the
+        exact-leak-check identity (``free == total`` per tier once no
+        requests are live).  Returns the number of blocks freed."""
+        blocks = list(self._cached)
+        self._cached.clear()
+        freed = self._alloc.release(blocks) if blocks else []
+        if self._prefix is not None and freed:
+            self._prefix.evict(freed)
+        return len(freed)
+
+    def _hbm_matched(self, matched: List[int]) -> int:
+        """Matched trie blocks that are already HBM-resident — only
+        those reduce the admission draw.  A host-tier match still saves
+        the prefill compute, but its promote consumes one free HBM
+        block from the slot's sub-pool exactly like a fresh allocation
+        would, so placement must budget for it."""
+        if not self.kv_tiering:
+            return len(matched)
+        return sum(1 for b in matched if self._alloc.tier_of(b) == "hbm")
 
     def _place(self, r: Request, avail: List[int],
                free_by_group: Dict[int, int],
@@ -707,7 +972,7 @@ class ServeEngine:
         for i in order:
             g = self._slot_group(avail[i])
             matched = self._match_for(r, info, g) if info is not None else []
-            need = max(0, need_full - len(matched))
+            need = max(0, need_full - self._hbm_matched(matched))
             if need <= free_by_group[g]:
                 free_by_group[g] -= need
                 return avail.pop(i)
@@ -725,7 +990,7 @@ class ServeEngine:
             matched = self._match_for(r, info, g) if info is not None else []
             if self._bucket_key(r, matched) != key:
                 continue
-            need = max(0, need_full - len(matched))
+            need = max(0, need_full - self._hbm_matched(matched))
             if need <= free_by_group[g]:
                 free_by_group[g] -= need
                 return avail.pop(i)
@@ -745,6 +1010,7 @@ class ServeEngine:
         blocking, so exhaustion delays rather than starves (and
         ``run_until_idle`` raises on true deadlock).
         """
+        self._promo_map.clear()        # promoted-id map is per admission
         while self.pending and self.free_slots:
             head = self.pending[0]
             info0 = self._match_info(head)
@@ -753,7 +1019,23 @@ class ServeEngine:
                              for g in range(self.pool_groups)}
             s0 = self._place(head, avail, free_by_group, info0)
             if s0 is None:
-                return                 # pool exhausted: wait for frees
+                if not (self.kv_tiering and self._cached):
+                    return             # pool exhausted: wait for frees
+                # tier rung: spill cold cached blocks to host until some
+                # sub-pool can cover the head, then retry the placement
+                # once (the match memo is stale after a rekey)
+                need0 = self._admission_blocks(head)
+                for g in range(self.pool_groups):
+                    short = need0 - self._alloc.free_in(g)
+                    if short > 0:
+                        self._spill_cold(g, short)
+                info0 = self._match_info(head)
+                avail = list(self.free_slots)
+                free_by_group = {g: self._alloc.free_in(g)
+                                 for g in range(self.pool_groups)}
+                s0 = self._place(head, avail, free_by_group, info0)
+                if s0 is None:
+                    return             # truly exhausted: wait for frees
             m0 = self._match_for(head, info0, self._slot_group(s0))
             if self._can_ride(head, m0):
                 self.pending.pop(0)
@@ -784,6 +1066,12 @@ class ServeEngine:
             self.pending = rest
             for s in slots:
                 self.free_slots.remove(s)
+            if self.kv_tiering:
+                # hit-after-spill: matched lists may name host-tier (or
+                # already-promoted) blocks — resolve them to HBM ids
+                # before any gather or alias touches the device pool
+                matches = [self._promote_matched(m, self._slot_group(s))
+                           for m, s in zip(matches, slots)]
             self._admit_group(group, slots, matches, infos, key0)
 
     def _admit_ride(self, r: Request, slot: int,
@@ -794,7 +1082,7 @@ class ServeEngine:
         tick feeds the last prompt token at position ``matched_tokens``
         and samples the first output."""
         g = self._slot_group(slot)
-        matched = self._match_for(r, info, g)
+        matched = self._promote_matched(self._match_for(r, info, g), g)
         need = self._admission_blocks(r)
         self._alloc.retain(matched)
         fresh = self._alloc.allocate(need - len(matched), g)
@@ -1057,20 +1345,23 @@ class ServeEngine:
         hold the block its append row lands in — a missing table entry
         would silently *drop* the append (the freed-slot contract) and
         corrupt the request.  Grant failures degrade down the ladder:
-        migrate the slot to an idling sub-pool, else preempt a victim
-        (possibly the needy request itself) and retry.  After this
-        returns, every remaining active slot can decode."""
+        spill a cold cached block to the host tier, else migrate the
+        slot to an idling sub-pool, else preempt a victim (possibly the
+        needy request itself) and retry.  After this returns, every
+        remaining active slot can decode."""
         if self.kv_residency != "paged" or self.kv_admission != "grant":
             return
         for r in sorted(self.active.values(), key=lambda x: x.rid):
             guard = 0
             while self.active.get(r.slot) is r and self._needs_block(r):
                 guard += 1
-                assert guard <= self.max_batch + self.n_blocks + 2, \
+                assert guard <= self.max_batch + 2 * self.n_blocks + 2, \
                     "grant ladder did not converge"
                 blk = self._grant(self._slot_group(r.slot))
                 if blk is not None:
                     self._install_block(r, blk)
+                    continue
+                if self._spill_cold(self._slot_group(r.slot), 1):
                     continue
                 if self._try_migrate(r):
                     continue
@@ -1102,12 +1393,14 @@ class ServeEngine:
                 if self._alloc.refcount(blk) <= 1:
                     break
                 guard += 1
-                assert guard <= self.max_batch + self.n_blocks + 2, \
+                assert guard <= self.max_batch + 2 * self.n_blocks + 2, \
                     "CoW ladder did not converge"
                 fresh = self._grant(self._slot_group(r.slot))
                 if fresh is not None:
                     self._cow_copy(r, col, fresh)
                     break
+                if self._spill_cold(self._slot_group(r.slot), 1):
+                    continue
                 self._preempt_for(r)
 
     def _cow_copy(self, r: Request, col: int, fresh: int) -> None:
@@ -1216,31 +1509,91 @@ class ServeEngine:
         self._preempt(victim)
 
     def _preempt(self, r: Request) -> None:
-        """Evict an active request to the host side: blocks and slot
-        return to the pool, the tokens generated so far stay on the
-        request, and re-admission (a re-prefill of prompt+generated) is
-        scheduled with exponential backoff.  Past the retry budget — or
-        an already-missed deadline — the request is shed instead."""
+        """Evict an active request to the host side.  With tiering on
+        the victim *parks with state*: its KV blocks spill to the host
+        tier (dense stripes and SSM/conv rows are copied host-side),
+        so re-admission promotes them back and skips re-prefill
+        entirely — token-identical resume, zero recompute.  Without
+        tiering — or when the victim pins shared blocks, whose
+        sharers' tables point at the old ids — blocks are released and
+        re-admission is a re-prefill of prompt+generated.  Past the
+        retry budget or an already-missed deadline the request is shed
+        instead."""
         slot = r.slot
         del self.active[slot]
-        self._release_slot(slot, r)
         r.slot = -1
         r.preemptions += 1
         self.preemptions += 1
         self._preempt_ticks.append(self.tick)
+        shed_why = ""
+        delay = 0
         if r.deadline is not None and time.time() > r.deadline:
-            self._shed(r, "deadline missed at preemption — a re-prefill "
-                          "could not finish in time")
+            shed_why = ("deadline missed at preemption — a re-prefill "
+                        "could not finish in time")
+        else:
+            pol = self._backoff.setdefault(
+                r.rid, self.preemption.restart_policy())
+            try:
+                delay = int(pol.next_delay())
+            except RuntimeError:
+                shed_why = ("preemption retry budget exhausted "
+                            f"({self.preemption.max_preemptions})")
+        state = (self._park_state(r, slot)
+                 if not shed_why and self.kv_tiering else None)
+        if state is not None:
+            self.free_slots.append(slot)
+            self.slot_len[slot] = 0
+            self.preempted.append(
+                PreemptedRequest(r, self.tick + delay, state))
             return
-        pol = self._backoff.setdefault(r.rid,
-                                       self.preemption.restart_policy())
-        try:
-            delay = pol.next_delay()
-        except RuntimeError:
-            self._shed(r, "preemption retry budget exhausted "
-                          f"({self.preemption.max_preemptions})")
+        self._release_slot(slot, r)
+        if shed_why:
+            self._shed(r, shed_why)
             return
-        self.preempted.append(PreemptedRequest(r, self.tick + int(delay)))
+        self.preempted.append(PreemptedRequest(r, self.tick + delay))
+
+    def _park_state(self, r: Request,
+                    slot: int) -> Optional[Dict[str, Any]]:
+        """Capture a victim's full per-slot state host-side so its
+        resume needs no re-prefill: paged KV blocks spill to the host
+        tier (ids stay on ``r.blocks``), dense stripes copy their valid
+        rows, SSM/conv states copy their slot rows.  Returns None when
+        the victim cannot park with state — it pins shared blocks
+        (sharers' tables point at the old ids; moving them would strand
+        every alias) or the host pool cannot cover its blocks even
+        after evicting cold host entries — and the caller falls back to
+        the legacy release+re-prefill park."""
+        st: Dict[str, Any] = {"slot_len": int(self.slot_len[slot])}
+        if self.kv_residency == "paged" and r.blocks:
+            if self._host is None:
+                return None
+            if any(self._alloc.refcount(b) > 1 for b in r.blocks):
+                return None
+            short = len(r.blocks) - self._alloc.host_free
+            if short > 0:
+                self._evict_cached_host(short)
+            if len(r.blocks) > self._alloc.host_free:
+                return None
+            # a parked victim's spilled blocks are private host copies
+            # of *its* sequence — a trie match against them would alias
+            # state the resume owns, so the entries go, not rekey
+            if self._prefix is not None:
+                self._prefix.evict(list(r.blocks))
+            pairs = self._alloc.spill(list(r.blocks))
+            assert pairs is not None, "host headroom was just checked"
+            self._spill_rows(pairs)
+            r.blocks = [h for _, h in pairs]
+            st["kv_host"] = list(r.blocks)
+            self.cache["block_tbl"] = \
+                self.cache["block_tbl"].at[slot].set(-1)
+        elif self.arch.has_attention:
+            n = st["slot_len"]
+            st["kv_rows"] = (np.asarray(self.cache["k"][:, slot, :n]),
+                             np.asarray(self.cache["v"][:, slot, :n]))
+        for key in ("ssm", "conv"):
+            if key in self.cache:
+                st[key] = np.asarray(self.cache[key][:, slot])
+        return st
 
     def preempt(self, rid: int) -> None:
         """Forcibly evict an active request (chaos/test hook and ops
@@ -1272,18 +1625,141 @@ class ServeEngine:
         self.pending = keep
 
     def _readmit_preempted(self) -> None:
-        """Parked evictions whose backoff expired rejoin the *front* of
-        the pending queue (oldest rid first) — they already burned a
-        slot's worth of work; new arrivals should not starve them."""
+        """Parked evictions whose backoff expired rejoin service.
+        Stateless parks (tiering off, or a shared-block victim) rejoin
+        the *front* of the pending queue (oldest rid first — they
+        already burned a slot's worth of work; new arrivals should not
+        starve them) and re-prefill.  Parked-with-state evictions skip
+        the queue entirely: :meth:`_admit_resume` promotes their host
+        blocks back into a free slot's sub-pool and decode continues
+        where the eviction cut in — zero prefill calls.  A resume that
+        cannot fit this tick stays parked and retries next tick."""
         if not self.preempted:
             return
         ready = [p for p in self.preempted if p.not_before_tick <= self.tick]
         if not ready:
             return
-        self.preempted = [p for p in self.preempted
-                          if p.not_before_tick > self.tick]
+        keep = [p for p in self.preempted
+                if p.not_before_tick > self.tick]
         for p in sorted(ready, key=lambda p: p.request.rid, reverse=True):
-            self.pending.insert(0, p.request)
+            if p.parked_state is None:
+                self.pending.insert(0, p.request)
+                continue
+            r = p.request
+            if r.deadline is not None and time.time() > r.deadline:
+                self._drop_parked(p)
+                self._shed(r, f"deadline missed while parked "
+                              f"(tick {self.tick})")
+                continue
+            if not self._admit_resume(p):
+                keep.append(p)
+        self.preempted = keep
+
+    def _admit_resume(self, p: PreemptedRequest) -> bool:
+        """Resume a parked-with-state eviction: promote its host KV
+        blocks into a free slot's sub-pool (consuming the prefetch
+        stage if it landed), restore dense/SSM/conv rows, and hand the
+        request straight back to decode.  No prefill call — the next
+        tick feeds the last generated token at the parked position, so
+        the continuation is token-identical to an uninterrupted run."""
+        r, st = p.request, p.parked_state
+        if not self.free_slots:
+            return False
+        host_ids = st.get("kv_host", [])
+        if host_ids:
+            # the free slot whose sub-pool can cover the promote wins
+            # (emptiest first); spill cold cached blocks to make room
+            slot = None
+            for s in sorted(self.free_slots,
+                            key=lambda s: (-self._alloc.free_in(
+                                self._slot_group(s)), s)):
+                g = self._slot_group(s)
+                short = len(host_ids) - self._alloc.free_in(g)
+                if short > 0:
+                    self._spill_cold(g, short)
+                if self._alloc.free_in(g) >= len(host_ids):
+                    slot = s
+                    break
+            if slot is None:
+                return False
+            g = self._slot_group(slot)
+            staged = self._staged.pop(r.rid, None)
+            pairs = self._alloc.promote(host_ids, g)
+            assert pairs is not None, "free count was just checked"
+            if staged is not None and staged[0] == tuple(host_ids):
+                self._promote_rows(pairs, staged[1], staged[2])
+            else:
+                self._promote_rows(pairs)
+            r.blocks = [b for _, b in pairs]
+            rows = np.full((int(self.cache["block_tbl"].shape[1]),), -1,
+                           np.int32)
+            rows[:len(r.blocks)] = r.blocks
+            self.cache["block_tbl"] = \
+                self.cache["block_tbl"].at[slot].set(jnp.asarray(rows))
+            if self._prefix is not None and r.prefix_hashes:
+                # back on HBM, the prefix blocks are shareable again
+                self._prefix.insert(r.prefix_hashes,
+                                    r.blocks[:len(r.prefix_hashes)], g)
+        else:
+            slot = min(self.free_slots)
+            if "kv_rows" in st:
+                n = st["slot_len"]
+                k_rows, v_rows = st["kv_rows"]
+                self.cache["k"] = self.cache["k"].at[:, slot, :n].set(
+                    jnp.asarray(k_rows))
+                self.cache["v"] = self.cache["v"].at[:, slot, :n].set(
+                    jnp.asarray(v_rows))
+        for key in ("ssm", "conv"):
+            if key in st:
+                self.cache[key] = self.cache[key].at[:, slot].set(
+                    jnp.asarray(st[key]))
+        self.free_slots.remove(slot)
+        self.slot_len[slot] = st["slot_len"]
+        r.slot = int(slot)
+        self.active[slot] = r
+        return True
+
+    def _drop_parked(self, p: PreemptedRequest) -> None:
+        """Release a parked-with-state eviction's host-side holdings
+        (shed, or abandoned): host block refs return to the host free
+        list and any staged prefetch is discarded."""
+        r = p.request
+        self._staged.pop(r.rid, None)
+        if p.parked_state and p.parked_state.get("kv_host"):
+            freed = self._alloc.release(r.blocks)
+            if self._prefix is not None and freed:
+                self._prefix.evict(freed)
+            r.blocks = []
+
+    def _stage_prefetch(self) -> None:
+        """Double-buffered resume prefetch: for every parked-with-state
+        eviction whose backoff expires by the *next* tick, start the
+        host→device transfer of its spilled KV rows now
+        (``jax.device_put``) — this tick's decode dispatch overlaps the
+        stream-in, and the resume finds device-resident rows waiting
+        instead of paying a synchronous copy.  One-tick lookahead is
+        what the plan's feasibility check sized: a block must stream in
+        under ``block_len`` decode ticks.  ``kv_prefetch="off"``
+        disables staging — the resume stalls on the transfer (the gap
+        the benchmark's prefetch-off rows measure)."""
+        if not (self.kv_prefetch and self.kv_tiering
+                and self._host is not None):
+            return
+        for p in self.preempted:
+            st = p.parked_state
+            if st is None or not st.get("kv_host"):
+                continue
+            if p.not_before_tick > self.tick + 1:
+                continue
+            rid = p.request.rid
+            ids = tuple(st["kv_host"])
+            got = self._staged.get(rid)
+            if got is not None and got[0] == ids:
+                continue
+            idx = np.asarray([h - self.n_blocks for h in ids], np.int64)
+            self._staged[rid] = (ids,
+                                 jax.device_put(self._host["k"][:, idx]),
+                                 jax.device_put(self._host["v"][:, idx]))
 
     # ------------------------------------------------------------------
     def _next_key(self) -> jax.Array:
@@ -1309,11 +1785,20 @@ class ServeEngine:
         admit, secure grants, decode one token for all active slots."""
         t0 = time.perf_counter()
         self.tick += 1
+        if self.kv_residency == "paged" and \
+                self.tick % self.preemption.shed_window_ticks == 0:
+            # new low-water epoch once per rebalance window: without the
+            # reset the watermark only ever ratchets down, so one
+            # transient dip reads as a permanently hot sub-pool forever
+            self._alloc.reset_low_water()
         self._shed_expired_pending()
         self._readmit_preempted()
         self._admit()
         self._ensure_grants()
         self._ensure_writable()
+        # stage next tick's resume transfers before dispatching this
+        # tick's decode: the async device_put streams in underneath it
+        self._stage_prefetch()
         if not self.active:
             self._observe_tick(t0)
             return 0

@@ -31,7 +31,13 @@ Lifecycle contract (the engine owns it):
   writes unrelated rows, so a stale trie entry would alias garbage.
   While *any* holder keeps a block resident its trie entry stays live,
   which is what lets request B keep hitting a prefix request A
-  registered even after A finished, as long as a sharer pins it.
+  registered even after A finished, as long as a sharer pins it;
+* ``rekey`` when a resident block changes id *without* changing
+  content — a spill to the host tier, a promote back, a migration.
+  Entries are **tier-tagged** so a hit can tell a decode-ready HBM
+  block from a spilled one that must be promoted first: a hit on a
+  spilled prefix promotes, it does not miss.  Only an actual free
+  evicts.
 """
 
 from __future__ import annotations
@@ -73,6 +79,10 @@ class PrefixCache:
         self.groups = groups
         self._trie: List[Dict[str, int]] = [dict() for _ in range(groups)]
         self._by_block: Dict[int, Tuple[int, str]] = {}
+        # residency tag per indexed block ("hbm" | "host"): a hit on a
+        # host-tagged block is still a hit — the engine promotes it
+        # back before aliasing (hit-after-spill)
+        self._tier: Dict[int, str] = {}
         # telemetry: admission-time outcomes
         self.hits = 0           # requests admitted with >= 1 matched block
         self.misses = 0         # requests admitted with no match
@@ -80,6 +90,14 @@ class PrefixCache:
 
     def __len__(self) -> int:
         return len(self._by_block)
+
+    def has_block(self, block: int) -> bool:
+        """Is this block id currently indexed by any trie entry?"""
+        return block in self._by_block
+
+    def tier_of(self, block: int) -> str:
+        """Residency tag of an indexed block (KeyError if unindexed)."""
+        return self._tier[block]
 
     def match(self, hashes: Sequence[str], group: int = 0) -> List[int]:
         """Longest-prefix descent: resident block ids for the leading
@@ -94,7 +112,7 @@ class PrefixCache:
         return out
 
     def insert(self, hashes: Sequence[str], blocks: Sequence[int],
-               group: int = 0) -> None:
+               group: int = 0, tier: str = "hbm") -> None:
         """Index ``blocks[i]`` as holding the prefix named ``hashes[i]``.
         First writer wins: a hash already present keeps its original
         block (the new copy is a private duplicate — correct, just not
@@ -106,6 +124,25 @@ class PrefixCache:
                 continue
             t[h] = b
             self._by_block[b] = (group, h)
+            self._tier[b] = tier
+
+    def rekey(self, pairs: Sequence[Tuple[int, int]], tier: str) -> None:
+        """Follow indexed blocks through a tier transition (or any
+        id-preserving-content move): entry ``old`` becomes ``new``,
+        tagged with the destination ``tier``.  The entry stays in its
+        original group's trie — a spilled block still belongs to the
+        sub-pool whose requests can promote it, and a promote re-tags
+        in place.  Unindexed ``old`` ids are skipped (not every spilled
+        block was ever registered)."""
+        for old, new in pairs:
+            gh = self._by_block.pop(old, None)
+            if gh is None:
+                continue
+            self._tier.pop(old, None)
+            g, h = gh
+            self._trie[g][h] = new
+            self._by_block[new] = (g, h)
+            self._tier[new] = tier
 
     def evict(self, blocks: Sequence[int]) -> None:
         """Prune entries whose backing blocks left the pool (freed, or
@@ -114,8 +151,11 @@ class PrefixCache:
             gh = self._by_block.pop(b, None)
             if gh is not None:
                 self._trie[gh[0]].pop(gh[1], None)
+            self._tier.pop(b, None)
 
     def stats(self) -> Dict[str, int]:
         return {"trie_blocks": len(self._by_block),
+                "host_blocks": sum(1 for t in self._tier.values()
+                                   if t == "host"),
                 "hits": self.hits, "misses": self.misses,
                 "hit_tokens": self.hit_tokens}

@@ -341,8 +341,16 @@ def test_serve_paged_2d_shared_prefix_token_identity():
                 # the per-sub-pool tries: one per data shard
                 assert eng._prefix is not None \\
                     and eng._prefix.groups == 2
+                # the plan sizes a host tier for this geometry, so the
+                # engine retains finished trie-indexed blocks in its
+                # cold cache after drain; release them to check the
+                # pool identity
+                assert eng.block_stats()["cached"] >= 1
+                assert eng.drop_block_cache() >= 1
                 st = eng.block_stats()
                 assert st["prefix_trie"] == 0 and st["shared"] == 0
+                assert st["cached"] == 0
+                assert st["host_free"] == st["host_total"]
             stats = eng.block_stats()
             assert stats["free"] == stats["total"], stats
             return {r.rid: r.out_tokens for r in done}

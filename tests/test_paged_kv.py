@@ -430,6 +430,34 @@ def test_plan_cli_list_show_diff(capsys, tmp_path):
         main(["--plan-dir", d, "show", "ffffffffffff"])
 
 
+def test_plan_cli_renders_tier_decisions_schema_tolerant(capsys, tmp_path):
+    """`plan show` renders the new tier fields, and artifacts stored
+    before the multi-tier refactor (no ``kv_tier_split`` key) display
+    as an hbm-only pool instead of raising or dropping the field."""
+    from types import SimpleNamespace
+
+    from repro.configs import ShapeConfig
+    from repro.core.pipeline import specialize
+    from repro.launch.plan import _decisions, main
+    d = str(tmp_path / "plans")
+    plan = specialize("qwen3-8b", ShapeConfig("tiered", "decode", 64, 2),
+                      mesh_shape=(1, 1), plan_dir=d)
+    assert main(["--plan-dir", d, "show", plan.content_hash()[:10]]) == 0
+    out = capsys.readouterr().out
+    assert '"kv_tier_split": "hbm+host"' in out
+    assert '"kv_host_blocks"' in out and '"kv_prefetch": "on"' in out
+
+    # a pre-tier paged artifact: same decisions minus every tier key
+    est = {k: v for k, v in plan.estimates.items()
+           if k not in ("kv_tier_split", "kv_host_blocks", "kv_prefetch")}
+    dec = _decisions(SimpleNamespace(estimates=est))
+    assert dec["kv_tier_split"] == "hbm-only"
+    assert "kv_host_blocks" not in dec and "kv_prefetch" not in dec
+    # dense plans get no synthesized tier field — there is no pool
+    dense = _decisions(SimpleNamespace(estimates={"kv_residency": "dense"}))
+    assert "kv_tier_split" not in dense
+
+
 def test_plan_cli_verify_reports_corrupt_and_stale(capsys, tmp_path):
     from repro.core.pipeline import specialize
     from repro.launch.plan import main

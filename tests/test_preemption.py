@@ -155,6 +155,47 @@ def test_preempted_request_state_is_host_side():
     assert eng.block_stats()["free"] == eng.block_stats()["total"]
 
 
+def test_tiered_park_resumes_without_reprefill():
+    """With a host tier behind the pool, a preemption victim parks its
+    KV blocks in host DRAM and resumes by promoting them back — the
+    re-admission must NOT re-prefill (``prefill_calls`` frozen across
+    the park/resume cycle; the legacy stateless park re-prefills), and
+    the tokens still equal the uninterrupted oracle."""
+    arch, params = _arch_params("qwen3-8b")
+    prompts = _prompts(arch)
+    want = _oracle(arch, params, prompts, 6)
+    eng = ServeEngine(arch, params, CFG, max_batch=3, max_len=32,
+                      kv_residency="paged", kv_block_len=8, kv_n_blocks=9,
+                      kv_admission="grant", kv_host_blocks=16,
+                      preemption=PreemptionPolicy(max_preemptions=8,
+                                                  backoff_base_ticks=1))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    for _ in range(3):
+        eng.step()                   # all three admitted, mid-decode
+    calls = eng.prefill_calls
+    victim = max(eng.active.values(), key=lambda r: len(r.out_tokens))
+    eng.preempt(victim.rid)
+    parked = eng.preempted[0]
+    assert parked.parked_state is not None, "victim did not park with state"
+    spilled = parked.parked_state.get("kv_host")
+    assert spilled, "no KV blocks went to the host tier"
+    assert all(b >= eng.n_blocks for b in parked.request.blocks), \
+        "parked request still holds HBM block ids"
+    eng.run_until_idle(max_ticks=200)
+    assert eng.prefill_calls == calls, \
+        "tiered resume re-prefilled instead of promoting"
+    assert eng.preemptions == 1 and not eng.shed
+    got = {r.prompt.tobytes(): r.out_tokens for r in eng.finished}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w
+    assert eng._alloc.promotes >= len(spilled)
+    eng.drop_block_cache()
+    st = eng.block_stats()
+    assert st["free"] == st["total"], "HBM blocks leaked"
+    assert st["host_free"] == st["host_total"], "host blocks leaked"
+
+
 # ---------------- migration (sub-pool rebalancing) --------------------
 
 def test_migration_rebalances_to_idle_sub_pool():

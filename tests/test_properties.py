@@ -42,35 +42,49 @@ SIZES = {"data": 16, "model": 16}
 # a hypothesis twin below widens the sequences when available.
 # =====================================================================
 
-#: (n_blocks, groups): 1-D pools and 2-D data-degree sub-pool splits
-POOL_GEOMETRIES = [(8, 1), (24, 1), (16, 2), (32, 4), (64, 8)]
+#: (n_blocks, groups, host_blocks): 1-D pools and 2-D data-degree
+#: sub-pool splits, with and without a host spill tier behind them
+POOL_GEOMETRIES = [(8, 1, 0), (24, 1, 16), (16, 2, 8), (32, 4, 0),
+                   (64, 8, 32)]
 
 
-def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
-    """Drive one admit/grant/retain/finish sequence, asserting every
-    invariant the serving engine relies on after each step.
+def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int,
+                    host_blocks: int = 0):
+    """Drive one admit/grant/retain/spill/promote/finish sequence,
+    asserting every invariant the serving engine relies on after each
+    step.
 
-    ``ops`` yields (kind, group, need, pick) tuples; kind < 0.4 admits
-    a multi-block budget, kind < 0.55 is a one-block grow-on-demand
-    grant appended to a random live holder, kind < 0.7 retains a random
+    ``ops`` yields (kind, group, need, pick) tuples; kind < 0.35 admits
+    a multi-block budget, kind < 0.5 is a one-block grow-on-demand
+    grant appended to a random live holder, kind < 0.6 retains a random
     live holder's blocks into a new alias holder (a prefix-cache hit),
-    else a random live holder finishes — its blocks only come back to
-    the free list once every alias has finished too.  Returns the live
-    set for the caller's drain check.
+    kind < 0.7 spills a holder's *private* HBM blocks to the host tier
+    (shared blocks stay put in the fuzz — the other holders' lists
+    would go stale; the engine re-keys every table on a shared spill),
+    kind < 0.8 promotes a holder's private host blocks into the op's
+    sub-pool, kind < 0.85 starts a new low-water epoch, else a random
+    live holder finishes — its blocks only come back to the free list
+    once every alias has finished too.  Returns the live set for the
+    caller's drain check.
 
     The ``refs`` model (block -> holder count) encodes *no grant after
     free* AND *no free while shared* directly: a block leaves the model
     only when its last holder releases it, so a grant handing out a
     block some holder still owns — freed out from under it, or freed
-    while a sharer survived — trips the double-assignment assert.
+    while a sharer survived — trips the double-assignment assert.  The
+    ``water`` model is exact: the watermark equals the minimum free
+    count since the last epoch reset, pinned with equality — the
+    ratchet-forever bug (a watermark that survives a reset) and a
+    watermark that misses a spill/promote draw both trip it.
     """
-    alloc = BlockAllocator(n_blocks, groups)
+    alloc = BlockAllocator(n_blocks, groups, host_blocks=host_blocks)
     sub = n_blocks // groups
     live = []                     # allocations currently held
     refs = {}                     # model: block id -> holder count
     water = [alloc.low_water(g) for g in range(groups)]
+    epochs = 0
     for kind, group, need, pick in ops:
-        if kind < 0.4 or not live:
+        if kind < 0.35 or not live:
             got = alloc.allocate(need, group)
             if got is None:
                 # exhaustion is exact: refusal iff the sub-pool cannot
@@ -84,7 +98,7 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
                 for b in got:
                     refs[b] = 1
                 live.append(got)
-        elif kind < 0.55:
+        elif kind < 0.5:
             # grow-on-demand: one-block grant onto a live holder
             blk = alloc.allocate_one(group)
             if blk is None:
@@ -94,13 +108,50 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
                 assert blk // sub == group
                 refs[blk] = 1
                 live[pick % len(live)].append(blk)
-        elif kind < 0.7:
+        elif kind < 0.6:
             # prefix-cache hit: alias an existing holder's blocks
             got = list(live[pick % len(live)])
             alloc.retain(got)
             for b in got:
                 refs[b] += 1
             live.append(got)
+        elif kind < 0.7 and host_blocks:
+            # spill: one holder's private HBM blocks move to host ids,
+            # all-or-none (a partial spill would strand the holder)
+            holder = live[pick % len(live)]
+            cand = [b for b in holder if b < n_blocks and refs[b] == 1]
+            pairs = alloc.spill(cand)
+            if pairs is None:
+                assert len(cand) > alloc.host_free, \
+                    "spill refused despite host headroom"
+            else:
+                assert [o for o, _ in pairs] == cand
+                for o, h in pairs:
+                    assert h >= n_blocks, "spill produced an HBM id"
+                    refs[h] = refs.pop(o)
+                    holder[holder.index(o)] = h
+        elif kind < 0.8 and host_blocks:
+            # promote: one holder's private host blocks move back into
+            # the op's sub-pool (group integrity by construction)
+            holder = live[pick % len(live)]
+            cand = [b for b in holder if b >= n_blocks and refs[b] == 1]
+            pairs = alloc.promote(cand, group)
+            if pairs is None:
+                assert len(cand) > alloc.free_in(group), \
+                    "promote refused despite sub-pool headroom"
+            else:
+                for h, b in pairs:
+                    assert b // sub == group, "promote crossed a sub-pool"
+                    refs[b] = refs.pop(h)
+                    holder[holder.index(h)] = b
+        elif kind < 0.85:
+            # rebalance-cycle epoch boundary: the watermark snaps to
+            # the current free count instead of ratcheting forever
+            alloc.reset_low_water()
+            epochs += 1
+            assert alloc.low_water_epochs == epochs
+            for g in range(groups):
+                water[g] = alloc.free_in(g)
         else:
             got = live.pop(pick % len(live))
             freed = alloc.release(got)
@@ -115,36 +166,46 @@ def _fuzz_allocator(n_blocks: int, groups: int, ops, max_need: int):
         stats = alloc.stats()
         assert stats["total"] == n_blocks
         assert stats["free"] + stats["in_use"] == n_blocks, \
-            "blocks not conserved"
-        assert stats["in_use"] == len(refs)
+            "HBM blocks not conserved"
+        assert stats["host_free"] + stats["host_in_use"] == host_blocks, \
+            "host blocks not conserved"
+        hbm_refs = sum(1 for b in refs if b < n_blocks)
+        assert stats["in_use"] == hbm_refs
+        assert stats["host_in_use"] == len(refs) - hbm_refs
         assert stats["shared"] == sum(1 for c in refs.values() if c > 1)
         for b, c in refs.items():
             assert alloc.refcount(b) == c, "refcount drift"
+            assert alloc.tier_of(b) == ("hbm" if b < n_blocks else "host")
         assert sum(alloc.free_in(g) for g in range(groups)) == stats["free"]
         for g in range(groups):
-            # watermarks only ever ratchet down, and never sit above
-            # the current free count (they are the historical minimum)
-            assert alloc.low_water(g) <= min(water[g], alloc.free_in(g))
-            water[g] = alloc.low_water(g)
+            # exact watermark model: the minimum free count since the
+            # last epoch reset (free only dips within an op, so the
+            # post-op value is the op's minimum)
+            water[g] = min(water[g], alloc.free_in(g))
+            assert alloc.low_water(g) == water[g], "watermark drift"
     return alloc, live, refs
 
 
-@pytest.mark.parametrize("n_blocks,groups", POOL_GEOMETRIES)
+@pytest.mark.parametrize("n_blocks,groups,host_blocks", POOL_GEOMETRIES)
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_block_allocator_churn_invariants(n_blocks, groups, seed):
-    rng = random.Random(f"{n_blocks}/{groups}/{seed}")
+def test_block_allocator_churn_invariants(n_blocks, groups, host_blocks,
+                                          seed):
+    rng = random.Random(f"{n_blocks}/{groups}/{host_blocks}/{seed}")
     sub = n_blocks // groups
     ops = [(rng.random(), rng.randrange(groups),
             rng.randint(0, sub + 1),      # +1: requests past sub capacity
             rng.randrange(1 << 30)) for _ in range(400)]
-    alloc, live, refs = _fuzz_allocator(n_blocks, groups, ops, sub)
+    alloc, live, refs = _fuzz_allocator(n_blocks, groups, ops, sub,
+                                        host_blocks)
     # drain: releasing every holder (aliases included) restores the
-    # full pool — no leaks, no lingering refcounts
+    # full pool — no leaks, no lingering refcounts, in either tier
     for got in live:
         alloc.release(got)
     assert alloc.release([]) == []        # empty release is a no-op
     assert alloc.stats() == {"total": n_blocks, "free": n_blocks,
-                             "in_use": 0, "shared": 0, "groups": groups}
+                             "in_use": 0, "shared": 0, "groups": groups,
+                             "host_total": host_blocks,
+                             "host_free": host_blocks, "host_in_use": 0}
 
 
 def test_block_allocator_rejects_bad_usage():
@@ -188,7 +249,8 @@ def test_block_allocator_refcount_lifecycle():
     # empty-sequence release is an explicit no-op, not an error
     assert alloc.release([]) == []
     assert alloc.stats() == {"total": 8, "free": 8, "in_use": 0,
-                             "shared": 0, "groups": 2}
+                             "shared": 0, "groups": 2, "host_total": 0,
+                             "host_free": 0, "host_in_use": 0}
 
 
 def test_block_allocator_matches_engine_block_stats_contract():
@@ -238,6 +300,61 @@ def test_block_allocator_low_water_tracks_minimum():
     assert alloc.stats()["free"] == 8
 
 
+def test_reset_low_water_starts_new_epoch():
+    """The ratchet-forever fix: without an epoch reset, one transient
+    dip pins the watermark for the allocator's whole lifetime and the
+    engine's rebalancer reads a permanently hot sub-pool.  After
+    ``reset_low_water()`` the mark reports only *this* epoch's minimum
+    — and a promote's sub-pool draw dips it exactly like a grant."""
+    alloc = BlockAllocator(8, 1, host_blocks=4)
+    a = alloc.allocate(7)
+    alloc.release(a)
+    assert alloc.low_water() == 1         # the transient dip, ratcheted
+    alloc.reset_low_water()
+    assert alloc.low_water() == 8, "epoch reset must snap to current free"
+    assert alloc.low_water_epochs == 1
+    b = alloc.allocate(2)
+    assert alloc.low_water() == 6         # this epoch's own minimum
+    pairs = alloc.spill(b)
+    assert alloc.free == 8                # spill returns the HBM ids…
+    assert alloc.low_water() == 6         # …but never raises the mark
+    got = alloc.promote([h for _, h in pairs], 0)
+    assert alloc.low_water() == 6         # promote drew 2 of 8 again
+    alloc.release([nb for _, nb in got])
+    alloc.reset_low_water()
+    assert alloc.low_water() == 8 and alloc.low_water_epochs == 2
+
+
+def test_block_allocator_tier_transitions_reject_bad_usage():
+    """Spill/promote misuse stays loud: wrong tier, non-resident ids,
+    duplicates, and over-capacity moves all refuse instead of
+    corrupting the accounting."""
+    alloc = BlockAllocator(8, 2, host_blocks=4)
+    got = alloc.allocate(3, group=0)
+    pairs = alloc.spill(got[:2])
+    host = [h for _, h in pairs]
+    assert all(alloc.tier_of(h) == "host" for h in host)
+    assert alloc.free_in(0) == 3          # the vacated ids came home
+    with pytest.raises(ValueError, match="host-resident"):
+        alloc.spill(host)                 # already host-tier
+    with pytest.raises(ValueError, match="hbm-resident"):
+        alloc.promote([got[2]], 0)        # still HBM-resident
+    free_host = (set(range(8, 12)) - set(host)).pop()
+    with pytest.raises(ValueError, match="not currently allocated"):
+        alloc.promote([free_host], 0)     # never spilled into
+    with pytest.raises(ValueError, match="listed twice"):
+        alloc.promote([host[0], host[0]], 0)
+    back = alloc.promote(host, 1)         # promote may target any group
+    assert all(4 <= b < 8 for _, b in back), "promote missed its group"
+    alloc.release([got[2]] + [b for _, b in back])
+    assert alloc.stats()["free"] == 8
+    assert alloc.stats()["host_free"] == 4
+    with pytest.raises(ValueError, match="outside both tiers"):
+        alloc.tier_of(12)
+    with pytest.raises(ValueError, match="outside HBM pool"):
+        alloc.group_of(8)                 # host ids have no group
+
+
 if HAVE_HYPOTHESIS:
     @given(st.sampled_from(POOL_GEOMETRIES),
            st.lists(st.tuples(st.floats(0, 1), st.integers(0, 7),
@@ -245,13 +362,14 @@ if HAVE_HYPOTHESIS:
                     min_size=1, max_size=300))
     @settings(max_examples=50, deadline=None)
     def test_block_allocator_churn_invariants_hypothesis(geom, raw_ops):
-        n_blocks, groups = geom
+        n_blocks, groups, host_blocks = geom
         ops = [(k, g % groups, need, pick) for k, g, need, pick in raw_ops]
         alloc, live, refs = _fuzz_allocator(n_blocks, groups, ops,
-                                            n_blocks // groups)
+                                            n_blocks // groups, host_blocks)
         for got in live:
             alloc.release(got)
         assert alloc.stats()["free"] == n_blocks
+        assert alloc.stats()["host_free"] == host_blocks
 
 
 # =====================================================================
@@ -329,6 +447,37 @@ def test_engine_churn_fuzz_grant_preempt_migrate(seed):
             assert got[p.tobytes()] == w, \
                 "preempted request diverged from its uninterrupted run"
     assert eng.block_stats()["free"] == 8, "blocks leaked"
+
+
+def test_engine_resets_low_water_epoch_per_rebalance_cycle():
+    """The engine owns the epoch clock: once per shed window it calls
+    ``reset_low_water()``, so a burst that drained a sub-pool early in
+    an engine's life stops reading as permanent pressure.  Before the
+    fix the watermark ratcheted down forever."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import lm
+    from repro.models.lm import RunCfg
+    from repro.serve.engine import PreemptionPolicy, ServeEngine
+
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params, RunCfg(block_q=16, ssd_chunk=16),
+                      max_batch=2, max_len=32, kv_residency="paged",
+                      kv_block_len=8, kv_n_blocks=4, kv_admission="grant",
+                      preemption=PreemptionPolicy(shed_window_ticks=4))
+    eng.submit(np.arange(11, dtype=np.int32) % arch.vocab_size,
+               max_new_tokens=6)
+    eng.run_until_idle(max_ticks=64)
+    assert eng._alloc.low_water() < 4, "the burst never dipped the mark"
+    dipped = eng._alloc.low_water()
+    ticks = eng.tick
+    while eng.tick < ticks + 8:           # two idle rebalance windows
+        eng.step()
+    assert eng._alloc.low_water_epochs >= 2
+    assert eng._alloc.low_water() == 4, \
+        f"watermark stuck at the historical dip ({dipped}) after the " \
+        "rebalance epoch reset"
 
 
 # =====================================================================

@@ -525,6 +525,114 @@ def test_shared_prefix_preempt_victim_resumes_token_identical():
     assert stats["free"] == stats["total"], "resume leaked references"
 
 
+# ---------------- multi-tier KV residency ----------------
+#
+# The host-DRAM tier behind the HBM pool: cold cached blocks spill,
+# prefix hits on spilled blocks promote back (hit-after-spill), and a
+# preemption victim parks its whole per-slot state host-side so its
+# resume is promote-and-continue — zero re-prefill.  Every cell must
+# stay token-identical to the untiered run and leak nothing in either
+# tier.
+
+def test_prefix_hit_after_spill_promotes_not_misses():
+    """Spilling a trie-indexed cold block must not turn the next prefix
+    hit into a miss: the tier-tagged entry survives the spill, the
+    repeat submission promotes the block back into its sub-pool, and
+    the decoded tokens equal the never-spilled run."""
+    arch, params = _arch_params("qwen3-8b")
+    p1, p2 = _shared_prefix_prompts(arch, seed=11)
+
+    def run(spill):
+        eng = ServeEngine(arch, params, CFG, max_batch=2, max_len=32,
+                          kv_residency="paged", kv_block_len=16,
+                          kv_prefix_reuse="on", kv_host_blocks=8)
+        eng.submit(p1, max_new_tokens=6)
+        eng.run_until_idle(max_ticks=64)
+        # p1 finished, but its full prefix block stays engine-cached
+        assert eng.block_stats()["cached"] >= 1
+        if spill:
+            assert eng.spill_cached() >= 1
+            st = eng.block_stats()
+            assert st["host_in_use"] >= 1, st
+            # the trie entry followed the block to the host tier
+            assert eng._prefix.stats()["host_blocks"] >= 1
+        eng.submit(p2, max_new_tokens=6)   # same 16-token system prefix
+        eng.run_until_idle(max_ticks=64)
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    want, _ = run(False)
+    got, eng = run(True)
+    assert got == want, (got, want)
+    ps = eng.pressure_stats()
+    assert ps["prefix_hits"] >= 1, ps        # hit, not miss, after spill
+    assert ps["promotes"] >= 1, ps           # ...served by a promote
+    eng.drop_block_cache()
+    st = eng.block_stats()
+    assert st["free"] == st["total"], "HBM blocks leaked"
+    assert st["host_free"] == st["host_total"], "host blocks leaked"
+    assert st["prefix_trie"] == 0
+
+
+@pytest.mark.parametrize("residency", RESIDENCIES)
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("name", ARCHS)
+def test_tiered_park_token_identity_matrix(name, impl, residency):
+    """Forced mid-decode park (spill to the host tier) + resume
+    (promote back) in every runnable (arch x impl x residency) cell:
+    token-identical to the unspilled sequential oracle, zero
+    re-prefill across the park, zero leaks in either tier.  Paged
+    cells round-trip KV blocks through host DRAM; dense attention
+    cells park their valid KV stripe rows; the SSM-only arch parks its
+    recurrent state — the whole per-slot template migrates."""
+    if impl == "shard_map_flash":
+        pytest.skip("the real sharded shard_map path needs >1 host "
+                    "device; covered by tests/test_multidevice.py")
+    if residency == "paged" and name == "mamba2-2.7b":
+        pytest.skip("SSM-only arch has no KV stripes to page — its "
+                    "state-park cell is the dense one")
+    arch, params = _arch_params(name)
+    cfg = _impl_cfg(impl)
+    prompts = _prompts(arch)
+    okey = (name, impl)
+    if okey not in _ORACLE_CACHE:
+        _ORACLE_CACHE[okey] = _serve_sequential(arch, params, cfg,
+                                                prompts, 6, 32)
+    want = _ORACLE_CACHE[okey]
+
+    kw = dict(PAGED, kv_admission="grant") if residency == "paged" else {}
+    eng = ServeEngine(arch, params, cfg, max_batch=3, max_len=32,
+                      kv_host_blocks=16, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    for _ in range(2):
+        eng.step()                       # all three admitted, mid-decode
+    calls = eng.prefill_calls
+    victim = max(eng.active.values(), key=lambda r: len(r.out_tokens))
+    eng.preempt(victim.rid)
+    assert eng.preempted, "forced preemption did not park"
+    parked = eng.preempted[0]
+    assert parked.parked_state is not None, \
+        "tiered victim fell back to a stateless park"
+    if eng.kv_residency == "paged":
+        assert parked.parked_state.get("kv_host"), "no KV blocks spilled"
+        assert all(b >= eng.n_blocks for b in parked.request.blocks), \
+            "parked request still holds HBM ids"
+    done = eng.run_until_idle(max_ticks=128)
+    assert eng.prefill_calls == calls, "park/resume re-prefilled"
+    assert len(done) == len(prompts) and not eng.shed
+    got = {r.prompt.tobytes(): r.out_tokens for r in done}
+    for p, w in zip(prompts, want):
+        assert got[p.tobytes()] == w, (name, impl, residency,
+                                       got[p.tobytes()], w)
+    assert eng.preemptions == 1
+    if eng.kv_residency == "paged":
+        assert eng._alloc.spills >= 1 and eng._alloc.promotes >= 1
+        eng.drop_block_cache()
+        st = eng.block_stats()
+        assert st["free"] == st["total"], "HBM blocks leaked"
+        assert st["host_free"] == st["host_total"], "host blocks leaked"
+
+
 # ---------------- from_plan workload-dims validation ----------------
 
 def test_from_plan_rejects_incompatible_workload_dims():
