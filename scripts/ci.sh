@@ -26,60 +26,107 @@
 #                            # more resident KV than the HBM pool holds,
 #                            # zero token divergence, zero leaks in
 #                            # either tier
-set -euo pipefail
+#   scripts/ci.sh --disagg   # disaggregated-prefill lane: seeded worker
+#                            # SIGKILLs mid-prefill asserting journal
+#                            # resume and degrade-to-inline fallback are
+#                            # token-identical to the inline oracles,
+#                            # with zero leaked blocks
+#
+# Every lane runs to completion and lands in the per-lane summary at
+# the bottom; any failing lane makes the whole run exit nonzero (no
+# early bail-out hiding later lanes, no green exit over a red lane).
+set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" == "--chaos" ]]; then
-    echo "== chaos lane: grant-denial + slow-tick soak (seeds 0, 1) =="
-    python scripts/serve_smoke.py --chaos --seed 0
-    python scripts/serve_smoke.py --chaos --seed 1
-    echo "CI OK (chaos)"
+LANES=()
+CODES=()
+
+run_lane() {
+    local name="$1"; shift
+    echo "== ${name} =="
+    "$@"
+    local rc=$?
+    LANES+=("${name}")
+    CODES+=("${rc}")
+    if [[ ${rc} -ne 0 ]]; then
+        echo "-- lane FAILED (exit ${rc}): ${name}"
+    fi
+}
+
+summary() {
+    local fail=0
+    echo
+    echo "== lane summary =="
+    for i in "${!LANES[@]}"; do
+        if [[ ${CODES[$i]} -eq 0 ]]; then
+            echo "  PASS  ${LANES[$i]}"
+        else
+            echo "  FAIL  ${LANES[$i]} (exit ${CODES[$i]})"
+            fail=1
+        fi
+    done
+    if [[ ${fail} -ne 0 ]]; then
+        echo "CI FAILED"
+        exit 1
+    fi
+    echo "CI OK"
     exit 0
+}
+
+if [[ "${1:-}" == "--chaos" ]]; then
+    run_lane "chaos: grant-denial + slow-tick soak (seed 0)" \
+        python scripts/serve_smoke.py --chaos --seed 0
+    run_lane "chaos: grant-denial + slow-tick soak (seed 1)" \
+        python scripts/serve_smoke.py --chaos --seed 1
+    summary
 fi
 
 if [[ "${1:-}" == "--prefix" ]]; then
-    echo "== prefix lane: shared-system-prompt reuse vs private oracle (seeds 0, 1) =="
-    python scripts/serve_smoke.py --prefix --seed 0
-    python scripts/serve_smoke.py --prefix --seed 1
-    echo "CI OK (prefix)"
-    exit 0
+    run_lane "prefix: shared-system-prompt reuse vs private oracle (seed 0)" \
+        python scripts/serve_smoke.py --prefix --seed 0
+    run_lane "prefix: shared-system-prompt reuse vs private oracle (seed 1)" \
+        python scripts/serve_smoke.py --prefix --seed 1
+    summary
 fi
 
 if [[ "${1:-}" == "--spill" ]]; then
-    echo "== spill lane: host-tier park/promote churn (seeds 0, 1) =="
-    python scripts/serve_smoke.py --spill --seed 0
-    python scripts/serve_smoke.py --spill --seed 1
-    echo "CI OK (spill)"
-    exit 0
+    run_lane "spill: host-tier park/promote churn (seed 0)" \
+        python scripts/serve_smoke.py --spill --seed 0
+    run_lane "spill: host-tier park/promote churn (seed 1)" \
+        python scripts/serve_smoke.py --spill --seed 1
+    summary
+fi
+
+if [[ "${1:-}" == "--disagg" ]]; then
+    run_lane "disagg: worker kill mid-prefill -> journal resume + degraded fallback (seed 0)" \
+        python scripts/serve_smoke.py --disagg --seed 0
+    run_lane "disagg: worker kill mid-prefill -> journal resume + degraded fallback (seed 1)" \
+        python scripts/serve_smoke.py --disagg --seed 1
+    summary
 fi
 
 if [[ "${1:-}" == "--dist" ]]; then
-    echo "== dist lane: test_multidevice under 8 forced host devices =="
     XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        run_lane "dist: test_multidevice under 8 forced host devices" \
         python -m pytest -x -q tests/test_multidevice.py
-    echo "CI OK (dist)"
-    exit 0
+    summary
 fi
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+run_lane "tier-1: pytest" python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== smoke: plan-artifact store round-trip (fresh-process reload) =="
-    python scripts/plan_roundtrip_smoke.py
-
-    echo "== smoke: plan-driven serve (from_plan -> staggered -> idle) =="
-    python scripts/serve_smoke.py
-
-    echo "== smoke: paged serve (block pool, bucketed admission, reclaim) =="
-    python scripts/serve_smoke.py --paged
-
-    echo "== smoke: benchmarks table1 (+ machine-readable rows) =="
+    run_lane "smoke: plan-artifact store round-trip (fresh-process reload)" \
+        python scripts/plan_roundtrip_smoke.py
+    run_lane "smoke: plan-driven serve (from_plan -> staggered -> idle)" \
+        python scripts/serve_smoke.py
+    run_lane "smoke: paged serve (block pool, bucketed admission, reclaim)" \
+        python scripts/serve_smoke.py --paged
     mkdir -p results
-    python -m benchmarks.run --only table1 --json results/BENCH_table1.json
+    run_lane "smoke: benchmarks table1 (+ machine-readable rows)" \
+        python -m benchmarks.run --only table1 --json results/BENCH_table1.json
 fi
 
-echo "CI OK"
+summary

@@ -37,11 +37,26 @@ Three modes:
   resident KV than the whole HBM pool**, more live sessions than the
   slot count, **zero token divergence** vs the uninterrupted oracles,
   promotion-based resume (spills and promotes both fire), and **zero
-  leaked blocks in either tier**.
+  leaked blocks in either tier**;
+* ``--disagg [--seed N]`` — disaggregated-prefill chaos soak: prefill
+  runs on supervised worker processes streaming pool-block-shaped KV
+  chunks home, a seeded SIGKILL lands **mid-prefill** (at least one
+  chunk journaled, at least one outstanding), and the orchestrator must
+  re-dispatch from the chunk journal — asserting **zero token
+  divergence** vs the inline oracles, at least one death/restart/
+  journal-resume, and **zero leaked blocks**; then a second engine with
+  a zero restart budget is killed the same way and must **degrade to
+  in-process prefill** (typed ``DegradedMode``, never a crash), again
+  token-identical.
+
+Every mode ends by dumping one ``ServeEngine.telemetry()`` JSON line —
+the single observability surface — instead of growing per-mode stats
+prints.
 """
 
 import argparse
 import dataclasses
+import json
 import random
 import sys
 import time
@@ -53,6 +68,12 @@ from repro.configs import ShapeConfig, get_arch
 from repro.core.pipeline import specialize
 from repro.models import lm
 from repro.serve.engine import PreemptionPolicy, ServeEngine
+
+
+def report(label: str, eng: ServeEngine, note: str) -> None:
+    """One telemetry JSON line + a human OK line, every mode the same."""
+    print("telemetry:", json.dumps(eng.telemetry(), sort_keys=True))
+    print(f"serve {label} OK: {note}")
 
 
 def chaos(seed: int) -> int:
@@ -118,12 +139,12 @@ def chaos(seed: int) -> int:
         f"30% denial rate never forced an eviction: {press}"
     assert press["straggler_ticks"] >= 1, \
         f"injected slow ticks never flagged: {press}"
-    print(f"serve chaos OK (seed {seed}): {len(done)} requests "
-          f"token-identical under {press['grant_denials']} denials, "
-          f"{press['preemptions']} preemptions, "
-          f"{press['migrations']} migrations, "
-          f"{press['straggler_ticks']} straggler ticks; "
-          f"pool whole at {stats['total']} blocks")
+    report("chaos", eng,
+           f"(seed {seed}) {len(done)} requests token-identical under "
+           f"{press['grant_denials']} denials, "
+           f"{press['preemptions']} preemptions, "
+           f"{press['straggler_ticks']} straggler ticks; "
+           f"pool whole at {stats['total']} blocks")
     return 0
 
 
@@ -190,15 +211,20 @@ def prefix(seed: int) -> int:
         done = eng.finished
         assert len(done) == len(prompts) and not eng.shed, (
             len(done), len(eng.shed))
+        # since the multi-tier PR finished sessions' blocks survive
+        # drain as trie-retained cold cache; drop it so the leak check
+        # below tests conservation, not retention policy
+        eng.drop_block_cache()
         stats = eng.block_stats()
         assert stats["free"] == stats["total"], f"blocks leaked: {stats}"
         assert stats["shared"] == 0 and stats["prefix_trie"] == 0, (
             f"refcounts leaked past drain: {stats}")
         return ({r.rid: r.out_tokens for r in done}, eng.prefill_calls,
-                fresh[0], peak_shared, eng.pressure_stats())
+                fresh[0], peak_shared, eng.pressure_stats(),
+                eng.telemetry())
 
-    got, calls_on, fresh_on, peak_shared, press = run("on")
-    want, calls_off, fresh_off, _, _ = run("off")
+    got, calls_on, fresh_on, peak_shared, press, tel = run("on")
+    want, calls_off, fresh_off, _, _, _ = run("off")
     assert got == want, "TOKEN DIVERGENCE vs the private-block oracle"
     assert calls_off >= 2 * calls_on, (
         f"prefix reuse must halve prefill calls at 80% overlap: "
@@ -207,14 +233,12 @@ def prefix(seed: int) -> int:
         f"prefix reuse must halve freshly pinned blocks: "
         f"{fresh_on} on vs {fresh_off} off")
     assert press["prefix_rides"] >= 1 and peak_shared >= 1, press
-    print(f"serve prefix OK (seed {seed}): {len(prompts)} requests "
+    print("telemetry:", json.dumps(tel, sort_keys=True))
+    print(f"serve prefix OK: (seed {seed}) {len(prompts)} requests "
           f"token-identical to private-block oracles; prefill calls "
           f"{calls_off} -> {calls_on}, fresh blocks {fresh_off} -> "
-          f"{fresh_on}, {press['prefix_hits']} hits "
-          f"({press['prefix_hit_tokens']} tokens aliased, "
-          f"{press['prefix_rides']} zero-prefill rides, peak "
-          f"{peak_shared} shared blocks, {press['cow_copies']} CoW "
-          "copies); refcounts conserved, pool whole at idle")
+          f"{fresh_on}, peak {peak_shared} shared blocks; refcounts "
+          "conserved, pool whole at idle")
     return 0
 
 
@@ -305,13 +329,119 @@ def spill(seed: int) -> int:
     st = eng.block_stats()
     assert st["free"] == st["total"], f"HBM blocks leaked: {st}"
     assert st["host_free"] == st["host_total"], f"host blocks leaked: {st}"
-    print(f"serve spill OK (seed {seed}): {len(done)} requests "
-          f"token-identical under {forced} forced evictions "
-          f"({press['spills']} spills, {press['promotes']} promotes, "
-          f"{press['preemptions']} preemptions); peak {peak_sessions} "
-          f"live sessions on {eng.max_batch} slots, peak "
-          f"{peak_resident} resident blocks vs {hbm_total} HBM "
-          f"(+{eng.host_blocks} host); both tiers whole at idle")
+    report("spill", eng,
+           f"(seed {seed}) {len(done)} requests token-identical under "
+           f"{forced} forced evictions ({press['spills']} spills, "
+           f"{press['promotes']} promotes); peak {peak_sessions} live "
+           f"sessions on {eng.max_batch} slots, peak {peak_resident} "
+           f"resident blocks vs {hbm_total} HBM; both tiers whole")
+    return 0
+
+
+def disagg(seed: int) -> int:
+    """Disaggregated-prefill chaos soak: kill workers mid-prefill.
+
+    Prompt lengths straddle multiple pool blocks so every prefill
+    streams several chunks home; ``chunk_delay_s`` widens the kill
+    window.  A seeded SIGKILL lands on the worker running one of the
+    flights once its journal holds at least one acked chunk (and at
+    least one is still outstanding) — forcing a true mid-prefill
+    recovery: re-dispatch from the last acked block boundary with the
+    journaled rows as the resume prefix.  Everything must come out
+    token-identical to the inline oracles with the pool whole.  A
+    second engine with ``max_restarts=0`` is killed the same way and
+    must degrade to in-process prefill under a typed ``DegradedMode``.
+    """
+    arch = get_arch("qwen3-8b").reduced()
+    shape = ShapeConfig("serve_disagg", "decode", 64, 2)
+    plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 1))
+    assert plan.estimates.get("kv_residency") == "paged"
+    assert plan.estimates.get("kv_prefill_mode") in ("inline", "disagg")
+    params = lm.init_params(arch, jax.random.PRNGKey(0),
+                            *plan.padded_sizes())
+
+    rng = np.random.default_rng(seed)
+    # plens 1 mod block_len: multi-block feeds, bounded worker compile
+    # shapes (every chunk is block-shaped, every tail is length 1)
+    plens = (17, 33, 49)
+    prompts = [rng.integers(0, arch.vocab_size, (plen,)).astype(np.int32)
+               for plen in plens]
+
+    want = []
+    for p in prompts:
+        ref = ServeEngine.from_plan(plan, params, arch=arch, max_batch=1)
+        ref.submit(p, max_new_tokens=6)
+        want.append(list(ref.run_until_idle(max_ticks=256)[0].out_tokens))
+
+    opts = {"heartbeat_s": 0.2, "backoff_base_s": 0.05,
+            "backoff_cap_s": 0.2, "chunk_delay_s": 0.05}
+
+    def drive(eng, rids, kill_rid, budget_s=420.0):
+        """Step until drained, SIGKILLing ``kill_rid``'s worker the
+        moment its flight is genuinely mid-prefill (journal non-empty,
+        chunks outstanding).  Returns True when the kill landed."""
+        killed = False
+        deadline = time.time() + budget_s
+        while (eng.pending or eng.active or eng.preempted
+               or eng._disagg) and time.time() < deadline:
+            eng.step()
+            fl = eng._disagg.get(kill_rid)
+            if not killed and fl is not None \
+                    and 1 <= fl.acked < fl.nb_feed:
+                killed = eng._fleet.kill_worker(rid=kill_rid)
+        assert not (eng.pending or eng.active or eng._disagg), \
+            "disagg drive timed out with work still live"
+        return killed
+
+    # ---- phase 1: kill mid-prefill, journal resume -------------------
+    eng = ServeEngine.from_plan(
+        plan, params, arch=arch, seed=0, kv_prefill_mode="disagg",
+        disagg_workers=2, disagg_opts=dict(opts))
+    assert eng.prefill_mode == "disagg", eng.prefill_mode
+    rids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    kill_rid = rids[int(rng.integers(0, len(rids)))]
+    killed = drive(eng, rids, kill_rid)
+    assert killed, "the mid-prefill kill window never opened"
+    got = {r.rid: list(r.out_tokens) for r in eng.finished}
+    for rid, w in zip(rids, want):
+        assert got[rid] == w, (
+            f"TOKEN DIVERGENCE on rid {rid} after worker kill: "
+            f"{got[rid]} != {w}")
+    tel = eng.telemetry()
+    json.dumps(tel)                 # the snapshot must serialize whole
+    fleet = tel["prefill"]["disagg"]["fleet"]
+    assert fleet["deaths"] >= 1 and fleet["restarts"] >= 1, fleet
+    assert tel["prefill"]["disagg"]["resumes"] >= 1, tel["prefill"]
+    st = eng.block_stats()
+    assert st["in_use"] == st["cached"], f"blocks leaked: {st}"
+    assert eng.degraded is None and not eng.shed
+    eng.shutdown()
+    deaths, resumes = fleet["deaths"], tel["prefill"]["disagg"]["resumes"]
+
+    # ---- phase 2: restart budget 0 -> degrade to inline --------------
+    eng2 = ServeEngine.from_plan(
+        plan, params, arch=arch, seed=0, kv_prefill_mode="disagg",
+        disagg_workers=1, disagg_opts=dict(opts, max_restarts=0))
+    rids2 = [eng2.submit(p, max_new_tokens=6) for p in prompts]
+    killed2 = drive(eng2, rids2, rids2[0])
+    assert killed2, "the degraded-phase kill window never opened"
+    got2 = {r.rid: list(r.out_tokens) for r in eng2.finished}
+    for rid, w in zip(rids2, want):
+        assert got2[rid] == w, (
+            f"TOKEN DIVERGENCE on rid {rid} in degraded fallback: "
+            f"{got2[rid]} != {w}")
+    assert eng2.prefill_mode == "degraded", eng2.prefill_mode
+    assert eng2.degraded is not None \
+        and eng2.degraded.worker_deaths >= 1, eng2.degraded
+    st2 = eng2.block_stats()
+    assert st2["in_use"] == st2["cached"], f"blocks leaked: {st2}"
+    report("disagg", eng2,
+           f"(seed {seed}) {len(rids) + len(rids2)} requests "
+           f"token-identical across {deaths + eng2.degraded.worker_deaths}"
+           f" worker kill(s): {resumes} journal resume(s), then "
+           f"degrade-to-inline ({eng2.degraded.reason}); pool whole")
+    eng2.shutdown()
     return 0
 
 
@@ -333,9 +463,14 @@ def main() -> int:
                          "promote under seeded eviction churn, asserting "
                          "more resident KV than the HBM pool holds, zero "
                          "divergence, zero leaks in either tier")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated-prefill chaos soak: seeded "
+                         "worker SIGKILLs mid-prefill, asserting journal "
+                         "resume and degraded fallback are both "
+                         "token-identical with zero leaked blocks")
     ap.add_argument("--seed", type=int, default=0,
                     help="traffic seed (chaos denials / prefix sessions "
-                         "/ spill churn)")
+                         "/ spill churn / disagg kills)")
     args = ap.parse_args()
     if args.chaos:
         return chaos(args.seed)
@@ -343,6 +478,8 @@ def main() -> int:
         return prefix(args.seed)
     if args.spill:
         return spill(args.seed)
+    if args.disagg:
+        return disagg(args.seed)
 
     # kv_heads=1 on a (model=2) plan mesh -> seq spill -> shard_map_flash
     arch = dataclasses.replace(get_arch("qwen3-8b").reduced(), n_kv_heads=1)
@@ -388,15 +525,11 @@ def main() -> int:
         assert max(eng.prefill_batches) > 1, (
             "bucketed admission never batched a prefill: "
             f"{eng.prefill_batches}")
-        press = eng.pressure_stats()
         extra = (f", paged pool {stats['total']}x{eng.block_len} rows "
-                 f"reclaimed, prefill buckets {list(eng.prefill_batches)}, "
-                 f"prefix hits {press['prefix_hits']} "
-                 f"({press['shared_blocks']} shared now, "
-                 f"{press['cow_copies']} CoW)")
-    print(f"serve smoke OK: {len(done)} requests, "
-          f"{sum(got)} tokens via {eng.decode_path} "
-          f"(plan {plan.content_hash()[:12]}){extra}")
+                 "reclaimed")
+    report("smoke", eng,
+           f"{len(done)} requests, {sum(got)} tokens via "
+           f"{eng.decode_path} (plan {plan.content_hash()[:12]}){extra}")
     return 0
 
 

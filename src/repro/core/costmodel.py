@@ -447,6 +447,76 @@ def kv_tier_split(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class KVPrefillSplit:
+    """Inline-vs-disaggregated prefill decision for the serve engine.
+
+    The paper's flow specializes one memory template per *role*; prefill
+    and decode are different roles with opposite profiles — prefill is a
+    flops-bound burst over the whole prompt, decode a bandwidth-bound
+    tick over one token.  Run inline, a worst-case prompt's prefill
+    steals ``stall_ticks`` consecutive decode ticks from every other
+    slot (head-of-line blocking).  Past a few ticks of stall the plan
+    flips to ``disagg``: prefill moves to supervised worker processes
+    that stream ``chunk_len``-sized pool-block-shaped KV chunks back to
+    the decode engine (``serve/disagg.py``), and decode never waits.
+    """
+
+    prefill_flops: float           # worst-case full-prompt prefill, one chip
+    peak_flops: float              # chip peak (bf16)
+    decode_tick_s: float           # modeled steady-state decode tick
+    chunk_len: int                 # disagg streaming granule (== block_len)
+    threshold_ticks: float = 8.0   # stall tolerated before flipping
+
+    @property
+    def prefill_s(self) -> float:
+        if self.peak_flops <= 0:
+            return 0.0
+        return self.prefill_flops / self.peak_flops
+
+    @property
+    def stall_ticks(self) -> float:
+        """Decode ticks an inline worst-case prefill steals in one gulp."""
+        if self.decode_tick_s <= 0:
+            return 0.0
+        return self.prefill_s / self.decode_tick_s
+
+    @property
+    def mode(self) -> str:
+        return "disagg" if self.stall_ticks > self.threshold_ticks \
+            else "inline"
+
+
+def kv_prefill_split(
+    seq_len: int,
+    persistent_bytes: float,
+    peak_flops: float,
+    decode_tick_s: float,
+    chunk_len: int,
+    threshold_ticks: float = 8.0,
+) -> KVPrefillSplit:
+    """Decide inline vs disaggregated prefill from the interference model.
+
+    The forward cost of one prefill token is ~2 flops per resident
+    parameter; with bf16 params ``persistent_bytes`` *is* the per-chip
+    flops/token (2 flops x bytes/2 params), so the worst-case prompt
+    (the shape's full ``seq_len``) costs ``seq_len * persistent_bytes``
+    flops on each chip — tensor parallelism scales both sides of the
+    ratio identically.  Compare that burst against the decode tick the
+    tier split already modeled: more than ``threshold_ticks`` ticks of
+    head-of-line stall flips the plan to ``disagg`` with ``chunk_len``
+    (the pool block length) as the streaming granule, so every shipped
+    chunk is exactly one pool block.
+    """
+    return KVPrefillSplit(
+        prefill_flops=float(seq_len) * max(0.0, persistent_bytes),
+        peak_flops=peak_flops,
+        decode_tick_s=decode_tick_s,
+        chunk_len=chunk_len,
+        threshold_ticks=threshold_ticks,
+    )
+
+
 # ---------------------------------------------------------------------------
 # VMEM tiling model (local partitioning pass)
 # ---------------------------------------------------------------------------

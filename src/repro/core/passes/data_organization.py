@@ -20,8 +20,8 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.core.costmodel import (MeshModel, bytes_per_device,
-                                  kv_block_geometry, kv_tier_split,
-                                  shard_factor)
+                                  kv_block_geometry, kv_prefill_split,
+                                  kv_tier_split, shard_factor)
 from repro.core.ir import MemorySpace, Role, TensorDecl
 from repro.core.passes import Pass, PassContext
 
@@ -320,6 +320,40 @@ class DataOrganizationPass(Pass):
                 f"({split.block_bytes} B/block x {geo.blocks_per_seq} "
                 "blocks/seq) — spilling a session that can never fully "
                 "park only fragments the tier")
+        # disaggregated prefill: one memory template per ROLE.  Prefill
+        # is a flops-bound burst, decode a bandwidth-bound tick; run in
+        # one process a worst-case prompt's prefill steals stall_ticks
+        # consecutive decode ticks from every live slot.  Past the
+        # threshold the plan flips to disagg — supervised prefill
+        # workers stream block_len-sized KV chunks to the decode engine
+        # (serve/disagg.py) and decode never waits on a prompt.
+        psplit = kv_prefill_split(
+            shape.seq_len, persistent, ctx.target.peak_bf16_flops,
+            tick_s, chunk_len=geo.block_len)
+        pmode = psplit.mode if not arch.has_ssm else "inline"
+        plan.estimates["kv_prefill_mode"] = pmode
+        plan.estimates["kv_prefill_chunk"] = psplit.chunk_len
+        plan.estimates["kv_prefill_stall_ticks"] = psplit.stall_ticks
+        if arch.has_ssm:
+            self.record(
+                ctx, "kv_prefill_mode", "inline",
+                f"{arch.name} has an SSM path — its state is sequential "
+                "across the whole prompt, so chunked block-native "
+                "prefill (pure-attention KV) cannot ship blocks "
+                "incrementally; prefill stays in-process")
+        else:
+            self.record(
+                ctx, "kv_prefill_mode", pmode,
+                f"worst-case {shape.seq_len}-token prefill burns "
+                f"{psplit.prefill_s * 1e3:.1f} ms of chip flops vs a "
+                f"{tick_s * 1e6:.0f} us decode tick — "
+                f"{psplit.stall_ticks:.0f} tick(s) of head-of-line "
+                f"stall (threshold {psplit.threshold_ticks:.0f}); "
+                + ("prefill moves to supervised workers streaming "
+                   f"{psplit.chunk_len}-token pool-block chunks"
+                   if pmode == "disagg" else
+                   "inline prefill cannot stall decode enough to pay "
+                   "for a worker fleet"))
         for t in ctx.ir.by_role(Role.KV_CACHE):
             plan.placement(t.name).layout["kv_residency"] = "paged"
             plan.placement(t.name).decided_by.append(self.name + ":paged")

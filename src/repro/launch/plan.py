@@ -60,6 +60,7 @@ _DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
                   "kv_n_blocks", "kv_admission", "kv_preempt_headroom",
                   "kv_prefix_reuse", "kv_prefix_hit_headroom",
                   "kv_tier_split", "kv_host_blocks", "kv_prefetch",
+                  "kv_prefill_mode", "kv_prefill_chunk",
                   "moe_impl", "grad_compression")
 
 
@@ -69,11 +70,16 @@ def _decisions(plan: FrozenPlan) -> dict:
     Plans stored before the multi-tier refactor never recorded a
     ``kv_tier_split`` — their paged pools *were* single-tier, so render
     them as ``hbm-only`` instead of dropping the field (or raising on a
-    reader that assumes it exists)."""
+    reader that assumes it exists).  Likewise plans from before the
+    disaggregated-prefill split never recorded a ``kv_prefill_mode`` —
+    their prefills all ran in-process, so render ``inline``."""
     dec = {k: plan.estimates[k] for k in _DECISION_KEYS
            if k in plan.estimates}
-    if dec.get("kv_residency") == "paged" and "kv_tier_split" not in dec:
-        dec["kv_tier_split"] = "hbm-only"
+    if dec.get("kv_residency") == "paged":
+        if "kv_tier_split" not in dec:
+            dec["kv_tier_split"] = "hbm-only"
+        if "kv_prefill_mode" not in dec:
+            dec["kv_prefill_mode"] = "inline"
     return dec
 
 

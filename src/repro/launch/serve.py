@@ -42,6 +42,10 @@ def main() -> None:
                          "(multi-host serving)")
     ap.add_argument("--num-processes", type=int, default=1)
     ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--disagg", type=int, default=0, metavar="N",
+                    help="run prefill on N supervised worker processes "
+                         "(disaggregated prefill/decode; implies "
+                         "--from-plan and forces kv_prefill_mode=disagg)")
     args = ap.parse_args()
 
     import jax
@@ -57,7 +61,7 @@ def main() -> None:
     from repro.serve.engine import ServeEngine
 
     arch = get_arch(args.arch).reduced()
-    if args.from_plan or args.mesh:
+    if args.from_plan or args.mesh or args.disagg:
         from repro.configs import ShapeConfig
         from repro.core.pipeline import specialize
 
@@ -71,12 +75,15 @@ def main() -> None:
                           mesh_shape=(d, m))
         params = init_params(arch, jax.random.PRNGKey(0),
                              *plan.padded_sizes())
-        engine = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh,
-                                       seed=args.seed)
+        engine = ServeEngine.from_plan(
+            plan, params, arch=arch, mesh=mesh, seed=args.seed,
+            kv_prefill_mode="disagg" if args.disagg else None,
+            disagg_workers=args.disagg)
         print(f"plan {plan.content_hash()[:12]} decode_impl="
               f"{plan.estimates.get('decode_impl', 'xla')} "
               f"kv_residency={engine.kv_residency} -> engine "
-              f"decode_path={engine.decode_path} on mesh {d}x{m}")
+              f"decode_path={engine.decode_path} "
+              f"prefill_mode={engine.prefill_mode} on mesh {d}x{m}")
     else:
         params = init_params(arch, jax.random.PRNGKey(0))
         cfg = RunCfg(block_q=32, ssd_chunk=16)
@@ -89,7 +96,9 @@ def main() -> None:
         plen = int(rng.integers(8, args.max_len - args.new_tokens - 1))
         engine.submit(rng.integers(0, arch.vocab_size, (plen,)),
                       max_new_tokens=args.new_tokens)
-    done = engine.run_until_idle()
+    # disagg ticks mostly sleep while workers compile/prefill off-process;
+    # give them a far larger budget than inline's deadlock watchdog
+    done = engine.run_until_idle(60000 if args.disagg else 1000)
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
@@ -98,6 +107,7 @@ def main() -> None:
         print(f"  rid={r.rid} ttft={(r.t_first-r.t_submit)*1e3:.0f}ms "
               f"total={(r.t_done-r.t_submit)*1e3:.0f}ms "
               f"tokens={r.out_tokens[:8]}...")
+    engine.shutdown()
 
 
 if __name__ == "__main__":

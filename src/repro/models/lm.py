@@ -964,6 +964,70 @@ def prefill_tail(arch: ArchConfig, params, batch, cfg: RunCfg,
     return logits[:, 0], tail_k, tail_v
 
 
+def prefill_chunked(arch: ArchConfig, params, tokens, chunk: int,
+                    cfg: RunCfg, kv_heads: int = 0,
+                    prefix_k=None, prefix_v=None,
+                    on_chunk=None, tail_fn=None):
+    """Block-native chunked prefill of ONE prompt: no dense ``(B, plen)``
+    intermediate ever exists.
+
+    ``tokens`` is ``(T,)`` — the part of the feed *after* any prefix
+    already in hand; ``prefix_k``/``prefix_v`` are ``(L, M, K, hd)``
+    rows covering the first M tokens (``None`` for a fresh prompt).
+    The tail is processed in ``chunk``-sized slices, each one a
+    :func:`prefill_tail` call chained on the KV accumulated so far —
+    every slice comes out pool-block-shaped, ready to scatter straight
+    into paged blocks.  Because ``attention_tail`` mirrors the
+    full-prefill ``attention_chunked`` op-for-op, the chained chunks
+    reproduce the dense prefill's hidden states exactly: same KV rows,
+    same last-token logits (pinned by ``test_disagg``).
+
+    ``on_chunk(block_idx, k_c, v_c)`` fires after each slice with
+    ``(L, t, K, hd)`` rows (``block_idx`` counts from the start of the
+    *feed*, prefix included) — the disagg worker streams these to the
+    decode engine and heartbeats between them.  ``tail_fn`` lets a
+    long-lived caller supply a pre-jitted ``prefill_tail`` closure so
+    the per-shape compile cache survives across prompts.
+
+    Returns ``(last-token logits (V,), ks, vs)`` with the per-chunk row
+    lists.  Attention-only archs (same restriction as ``prefill_tail``).
+    """
+    if arch.has_ssm:
+        raise ValueError(
+            f"prefill_chunked needs pure-attention KV for {arch.name}: "
+            "SSM state is sequential across the whole prompt")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    tokens = jnp.asarray(tokens, jnp.int32)
+    (T,) = tokens.shape
+    if T < 1:
+        raise ValueError("prefill_chunked needs at least one tail token")
+    L, K = arch.n_layers, (kv_heads or arch.n_kv_heads)
+    if prefix_k is None:
+        pk = jnp.zeros((L, 1, 0, K, arch.hd), jnp.bfloat16)
+        pv = pk
+    else:
+        pk = jnp.asarray(prefix_k)[:, None]    # (L, 1, M, K, hd)
+        pv = jnp.asarray(prefix_v)[:, None]
+    M = pk.shape[2]
+    if M % chunk:
+        raise ValueError(f"prefix length {M} not block-aligned to {chunk}")
+    if tail_fn is None:
+        tail_fn = lambda p, b, k, v: prefill_tail(arch, p, b, cfg, k, v)
+    ks, vs = [], []
+    logits = None
+    for i in range(0, T, chunk):
+        tok = tokens[None, i:i + chunk]                      # (1, t)
+        logits, tk, tv = tail_fn(params, {"tokens": tok}, pk, pv)
+        ks.append(tk[:, 0])                                  # (L, t, K, hd)
+        vs.append(tv[:, 0])
+        if on_chunk is not None:
+            on_chunk((M + i) // chunk, ks[-1], vs[-1])
+        pk = jnp.concatenate([pk, tk], axis=2)
+        pv = jnp.concatenate([pv, tv], axis=2)
+    return logits[0], ks, vs
+
+
 def _ssm_prefill(h, sp, arch, cfg):
     """SSD forward that also returns the final (ssm, conv) states."""
     dims = _ssm_dims(arch, sp)

@@ -25,18 +25,44 @@ import jax
 
 @dataclasses.dataclass
 class HealthMonitor:
-    """Heartbeat bookkeeping (transport-agnostic: callers feed beats)."""
+    """Heartbeat bookkeeping (transport-agnostic: callers feed beats).
+
+    Hosts must be *registered* with :meth:`expect` before they are
+    trusted to beat: a worker that dies between spawn and its first
+    heartbeat never enters ``beats``, and a monitor that only scans
+    ``beats`` reports it healthy forever.  ``expect`` starts the
+    deadline clock at registration time, so dead-on-arrival hosts show
+    up in :meth:`dead_hosts` after the same ``timeout_s`` as a host
+    that beat once and went silent.
+    """
 
     timeout_s: float = 60.0
     beats: Dict[int, float] = dataclasses.field(default_factory=dict)
+    expected: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def expect(self, host_ids, t: Optional[float] = None) -> None:
+        """Register hosts that *should* beat; resets their deadline clock
+        (re-registering a respawned host id restarts its grace window)."""
+        now = t if t is not None else time.time()
+        for h in host_ids:
+            self.expected[h] = now
+            self.beats.pop(h, None)
+
+    def forget(self, host_id: int) -> None:
+        """Deregister a host (retired/shut down on purpose)."""
+        self.expected.pop(host_id, None)
+        self.beats.pop(host_id, None)
 
     def beat(self, host_id: int, t: Optional[float] = None) -> None:
         self.beats[host_id] = t if t is not None else time.time()
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
         now = now if now is not None else time.time()
-        return sorted(h for h, t in self.beats.items()
-                      if now - t > self.timeout_s)
+        dead = {h for h, t in self.beats.items() if now - t > self.timeout_s}
+        # dead-on-arrival: expected, never beat, grace window elapsed
+        dead |= {h for h, t0 in self.expected.items()
+                 if h not in self.beats and now - t0 > self.timeout_s}
+        return sorted(dead)
 
     def healthy(self, now: Optional[float] = None) -> bool:
         return not self.dead_hosts(now)
@@ -74,6 +100,11 @@ def elastic_mesh(n_devices: int, model_parallel: int,
             f"{model_parallel}")
     usable = data * model_parallel
     devices = jax.devices()[:usable]
+    if len(devices) < usable:
+        raise RuntimeError(
+            f"only {len(devices)} device(s) visible; need {usable} "
+            f"(data={data} x model_parallel={model_parallel}) — "
+            f"shrink n_devices to what actually survived")
     import numpy as np
     arr = np.array(devices).reshape(data, model_parallel)
     return jax.sharding.Mesh(arr, axis_names)

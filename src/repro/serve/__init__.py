@@ -1,5 +1,8 @@
 from repro.serve.allocator import BlockAllocator
+from repro.serve.disagg import (DegradedMode, PlanHandshakeError,
+                                PrefillFleet)
 from repro.serve.engine import (OverloadError, PreemptedRequest,
                                 PreemptionPolicy, Request, ServeEngine)
-__all__ = ["BlockAllocator", "OverloadError", "PreemptedRequest",
-           "PreemptionPolicy", "Request", "ServeEngine"]
+__all__ = ["BlockAllocator", "DegradedMode", "OverloadError",
+           "PlanHandshakeError", "PreemptedRequest", "PreemptionPolicy",
+           "PrefillFleet", "Request", "ServeEngine"]

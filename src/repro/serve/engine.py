@@ -114,6 +114,26 @@ it:
 With tiering off (``kv_host_blocks=0``, the default) every path keeps
 its exact pre-tier semantics.
 
+Prefill itself is a plan decision (``kv_prefill_mode``): when the
+interference model says a worst-case inline prefill would steal too
+many decode ticks, the engine runs **disaggregated** — prompts
+dispatch to a supervised worker fleet (:mod:`repro.serve.disagg`)
+that prefills them chunked block-native and streams pool-block-shaped
+KV slabs back; the engine scatters each arriving block into the paged
+pool (the spill path run in reverse) and decode never waits on a
+prompt.  In-flight requests hold their slot and blocks but keep the
+block-table row at -1 until completion, so the freed-slot dummy
+decode can never touch a half-written block.  Acked full blocks form
+an idempotent journal: when a worker dies mid-prompt the request
+re-dispatches *from the last acked block boundary* (the journaled
+rows are gathered back as the resume prefix — token-identical by the
+``attention_tail`` bitwise contract).  When the fleet exhausts its
+restart budget the engine degrades to in-process prefill under a
+typed :class:`~repro.serve.disagg.DegradedMode` — never an unhandled
+crash — and deadline/overload semantics compose with the shed ladder
+unchanged (a request sheds the same way whether it dies in prefill or
+decode).
+
 Engines are plan-driven: :meth:`ServeEngine.from_plan` consumes the
 frozen plan artifact the specialization flow produced (possibly reloaded
 from the on-disk plan store in a different process) and derives the KV
@@ -235,6 +255,22 @@ class PreemptedRequest:
     # KV, {"kv_rows": (k, v)} for dense stripes, plus "ssm"/"conv"
     # host copies when the arch carries them
     parked_state: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass
+class _DisaggFlight:
+    """A request whose prefill is out at the worker fleet.  It owns a
+    slot and its admission blocks, but the block-table row stays -1
+    until completion (the freed-slot dummy decode must never append
+    into a half-written block).  ``acked`` counts contiguous *full*
+    blocks scattered into the pool — the idempotent journal a
+    re-dispatch resumes from after a worker death."""
+
+    request: Request
+    slot: int
+    group: int
+    nb_feed: int                   # ceil(flen / block_len)
+    acked: int = 0
 
 
 class ServeEngine:
@@ -415,6 +451,18 @@ class ServeEngine:
         # prefix-sharing telemetry (hit/miss counters live on _prefix)
         self.cow_copies = 0
         self.prefix_rides = 0          # admissions with zero prefill calls
+        # disaggregated prefill (attach_fleet() flips the mode on):
+        # rid -> in-flight dispatch; acked full blocks are the
+        # idempotent re-dispatch journal
+        self.kv_prefill_mode = "inline"
+        self._fleet = None
+        self._disagg: Dict[int, _DisaggFlight] = {}
+        self._redispatch: List[int] = []
+        self._inline_poison: set = set()   # rids whose worker prefill raised
+        self.degraded = None               # disagg.DegradedMode once degraded
+        self.disagg_dispatches = 0
+        self.disagg_chunks = 0
+        self.disagg_resumes = 0
 
         self._decode = jax.jit(
             lambda p, c, b: lm.decode_step(arch, p, c, b, cfg))
@@ -468,6 +516,40 @@ class ServeEngine:
                 return "flash"
         return impl
 
+    # ---------------- disaggregated prefill ---------------------------
+    @property
+    def prefill_mode(self) -> str:
+        """Effective prefill mode: ``"disagg"`` while a fleet serves,
+        ``"degraded"`` after the fleet exhausted its restart budget
+        (prefill is back in-process), ``"inline"`` otherwise."""
+        if self.degraded is not None:
+            return "degraded"
+        return self.kv_prefill_mode
+
+    def attach_fleet(self, fleet) -> None:
+        """Switch prefill to disaggregated mode through ``fleet`` (a
+        :class:`repro.serve.disagg.PrefillFleet`).  Typed rejections:
+        chunked block-native prefill needs the paged pool to scatter
+        into and pure-attention KV to chunk (an SSM path's state is
+        sequential across the whole prompt)."""
+        if self.kv_residency != "paged":
+            raise ValueError(
+                "disaggregated prefill streams pool-block-shaped KV "
+                "chunks — a dense-residency engine has no block pool "
+                "to scatter them into")
+        if not self.arch.has_attention or self.arch.has_ssm:
+            raise ValueError(
+                f"disaggregated prefill needs pure-attention KV; "
+                f"{self.arch.name} carries SSM state that is sequential "
+                "across the whole prompt")
+        self._fleet = fleet
+        self.kv_prefill_mode = "disagg"
+
+    def shutdown(self) -> None:
+        """Stop the prefill fleet (if any).  Idempotent."""
+        if self._fleet is not None:
+            self._fleet.shutdown()
+
     @classmethod
     def from_plan(cls, plan, params, *, arch: Optional[ArchConfig] = None,
                   mesh=None, max_batch: Optional[int] = None,
@@ -476,8 +558,11 @@ class ServeEngine:
                   kv_prefix_reuse: Optional[str] = None,
                   kv_host_blocks: Optional[int] = None,
                   kv_prefetch: Optional[str] = None,
-                  preemption: Optional[PreemptionPolicy] = None
-                  ) -> "ServeEngine":
+                  preemption: Optional[PreemptionPolicy] = None,
+                  kv_prefill_mode: Optional[str] = None,
+                  disagg_workers: int = 0,
+                  disagg_opts: Optional[Dict[str, Any]] = None,
+                  fleet=None) -> "ServeEngine":
         """Build an engine from the frozen plan artifact.
 
         The plan supplies everything the kwargs constructor asks for:
@@ -566,6 +651,26 @@ class ServeEngine:
         eng.plan = plan
         if mesh is not None:
             eng._place_on_mesh(mesh)
+        # disaggregated prefill: honor the pass's kv_prefill_mode
+        # decision (or the override), spawning a supervised worker
+        # fleet when the caller asked for workers.  disagg needs paged
+        # residency and a pure-attention arch; anything else — and a
+        # zero worker count — quietly keeps the inline path, exactly
+        # like the pass's own inline fallback.
+        pmode = (kv_prefill_mode if kv_prefill_mode is not None
+                 else str(plan.estimates.get("kv_prefill_mode", "inline")))
+        if pmode == "disagg":
+            if fleet is None and disagg_workers > 0 \
+                    and eng.kv_residency == "paged" \
+                    and arch.has_attention and not arch.has_ssm:
+                from repro.serve.disagg import PrefillFleet
+                fleet = PrefillFleet(
+                    plan, arch, params, disagg_workers,
+                    block_len=eng.block_len,
+                    kv_heads=cfg.kv_heads_padded,
+                    **(disagg_opts or {}))
+            if fleet is not None:
+                eng.attach_fleet(fleet)
         return eng
 
     def _place_on_mesh(self, mesh) -> None:
@@ -699,7 +804,53 @@ class ServeEngine:
                 "cow_copies": self.cow_copies,
                 "spills": self._alloc.spills,
                 "promotes": self._alloc.promotes,
-                "cached_blocks": len(self._cached)}
+                "cached_blocks": len(self._cached),
+                "prefill_mode": self.prefill_mode,
+                "degraded": (self.degraded.to_json()
+                             if self.degraded is not None else None),
+                "disagg_dispatches": self.disagg_dispatches,
+                "disagg_chunks": self.disagg_chunks,
+                "disagg_resumes": self.disagg_resumes,
+                "disagg_inflight": len(self._disagg)}
+
+    def telemetry(self) -> Dict[str, Any]:
+        """One JSON-serializable snapshot of everything the engine
+        knows about itself — plan decisions, queue depths, prefill
+        accounting, block-pool state, the degradation ladder, and (in
+        disagg mode) the fleet's supervision counters.  This is THE
+        observability surface: drivers dump it instead of growing their
+        own ad-hoc per-mode prints, and tests pin that ``json.dumps``
+        of it round-trips."""
+        fleet = self._fleet.stats() if self._fleet is not None else None
+        return {
+            "tick": self.tick,
+            "decode_path": self.decode_path,
+            "kv_residency": self.kv_residency,
+            "kv_admission": self.kv_admission,
+            "prefill_mode": self.prefill_mode,
+            "requests": {
+                "pending": len(self.pending),
+                "active": len(self.active),
+                "finished": len(self.finished),
+                "shed": len(self.shed),
+                "parked": len(self.preempted),
+                "disagg_inflight": len(self._disagg),
+            },
+            "prefill": {
+                "calls": self.prefill_calls,
+                "batches": [int(b) for b in
+                            list(self.prefill_batches)[-32:]],
+                "rides": self.prefix_rides,
+                "disagg": {
+                    "dispatches": self.disagg_dispatches,
+                    "chunks": self.disagg_chunks,
+                    "resumes": self.disagg_resumes,
+                    "fleet": fleet,
+                },
+            },
+            "blocks": {k: int(v) for k, v in self.block_stats().items()},
+            "pressure": self.pressure_stats(),
+        }
 
     def _recent_preemptions(self) -> int:
         lo = self.tick - self.preemption.shed_window_ticks
@@ -996,6 +1147,279 @@ class ServeEngine:
                 return avail.pop(i)
         return None
 
+    # ---------------- disaggregated prefill paths ---------------------
+    def _admit_disagg(self) -> None:
+        """Head-of-line admission in disagg mode: fully-matched feeds
+        still ride inline (zero prefill either way); everything else
+        reserves a slot plus its FULL admission-block need and
+        dispatches to the worker fleet.  Partial prefix matches are not
+        aliased on this path — the worker recomputes the whole feed and
+        the trie indexes the finished blocks at completion."""
+        self._promo_map.clear()
+        while self.pending and self.free_slots:
+            head = self.pending[0]
+            info = self._match_info(head)
+            # alias-aware probe: decode-ride beats any dispatch
+            avail = list(self.free_slots)
+            fbg = {g: self._alloc.free_in(g)
+                   for g in range(self.pool_groups)}
+            s_alias = self._place(head, avail, fbg, info)
+            if s_alias is not None and self._can_ride(
+                    head,
+                    self._match_for(head, info,
+                                    self._slot_group(s_alias))):
+                self.pending.pop(0)
+                self.free_slots.remove(s_alias)
+                self._admit_ride(head, s_alias, info)
+                continue
+            avail = list(self.free_slots)
+            fbg = {g: self._alloc.free_in(g)
+                   for g in range(self.pool_groups)}
+            s0 = self._place(head, avail, fbg, None)
+            if s0 is None and self.kv_tiering and self._cached:
+                # tier rung: spill cold cached blocks, retry once
+                need0 = self._admission_blocks(head)
+                for g in range(self.pool_groups):
+                    short = need0 - self._alloc.free_in(g)
+                    if short > 0:
+                        self._spill_cold(g, short)
+                avail = list(self.free_slots)
+                fbg = {g: self._alloc.free_in(g)
+                       for g in range(self.pool_groups)}
+                s0 = self._place(head, avail, fbg, None)
+            if s0 is None:
+                return             # pool exhausted: wait for frees
+            if head.rid in self._inline_poison:
+                # this rid's worker prefill raised (deterministically,
+                # as far as we know): run it in-process instead
+                self.pending.pop(0)
+                self.free_slots.remove(s0)
+                self._admit_group([head], [s0])
+                continue
+            if not self._dispatch_prefill(head, s0):
+                return             # no live worker (respawn in flight)
+            self.pending.pop(0)
+            self.free_slots.remove(s0)
+
+    def _dispatch_prefill(self, r: Request, slot: int,
+                          start_block: int = 0,
+                          flight: Optional[_DisaggFlight] = None) -> bool:
+        """Ship ``r``'s feed to the fleet.  A fresh dispatch allocates
+        the admission blocks first — they are the journal's scatter
+        target; a re-dispatch (``flight`` set) keeps them and gathers
+        the journaled blocks' rows back out of the pool as the worker's
+        resume prefix (token-identical: the rows ARE the prefix KV a
+        dense prefill would have computed)."""
+        g = self._slot_group(slot)
+        fresh = flight is None
+        if fresh:
+            blocks = self._alloc.allocate(self._admission_blocks(r), g)
+            if blocks is None:
+                return False       # placement said yes; lost the race
+            r.blocks = blocks
+        pk = pv = None
+        if start_block:
+            ids = jnp.asarray(np.asarray(r.blocks[:start_block], np.int32))
+            pk = np.asarray(self._gather_blocks(self.cache["k"], ids))
+            pv = np.asarray(self._gather_blocks(self.cache["v"], ids))
+            L = pk.shape[0]
+            m = start_block * self.block_len
+            pk = pk.reshape(L, m, *pk.shape[3:])
+            pv = pv.reshape(L, m, *pv.shape[3:])
+        feed = r.feed_tokens
+        ok = self._fleet.dispatch(
+            r.rid, feed[start_block * self.block_len:],
+            prefix_k=pk, prefix_v=pv)
+        if not ok:
+            if fresh and r.blocks:
+                self._release_blocks(r.blocks)
+                r.blocks = []
+            return False
+        if fresh:
+            r.slot = int(slot)
+            self._disagg[r.rid] = _DisaggFlight(
+                request=r, slot=slot, group=g,
+                nb_feed=-(-len(feed) // self.block_len))
+        elif start_block:
+            self.disagg_resumes += 1
+        self.disagg_dispatches += 1
+        return True
+
+    def _on_chunk(self, fl: _DisaggFlight, idx: int,
+                  k_rows, v_rows) -> None:
+        """Scatter one streamed pool-block-shaped KV slab into the
+        paged pool (the tier-spill mover run in reverse) and advance
+        the journal.  Chunks re-sent after a re-dispatch overwrite
+        bit-identical rows — idempotent by the chunked-prefill
+        contract.  Requests with no blocks (satisfied by the prefill
+        sample) only need the logits, so their chunks drop."""
+        r = fl.request
+        if not r.blocks or idx >= len(r.blocks) or idx > fl.acked:
+            return
+        k_rows = np.asarray(k_rows)
+        v_rows = np.asarray(v_rows)
+        t = k_rows.shape[1]
+        if t < self.block_len:
+            # partial tail block: pad to block shape (slot_len masks
+            # the zero rows, exactly like the inline scatter's clamp)
+            shape = (k_rows.shape[0], self.block_len, *k_rows.shape[2:])
+            kf = np.zeros(shape, k_rows.dtype)
+            vf = np.zeros(shape, v_rows.dtype)
+            kf[:, :t] = k_rows
+            vf[:, :t] = v_rows
+            k_rows, v_rows = kf, vf
+        bid = jnp.asarray(np.asarray([r.blocks[idx]], np.int32))
+        self.cache["k"] = self._scatter_blocks(
+            self.cache["k"], bid, jnp.asarray(k_rows)[:, None])
+        self.cache["v"] = self._scatter_blocks(
+            self.cache["v"], bid, jnp.asarray(v_rows)[:, None])
+        self.disagg_chunks += 1
+        if t == self.block_len and idx == fl.acked:
+            fl.acked = idx + 1
+
+    def _complete_prefill(self, fl: _DisaggFlight, logits) -> None:
+        """A worker finished a prompt: install the block-table row,
+        activate the slot, and (for fresh requests) sample the first
+        token from the streamed logits — bitwise the logits the inline
+        prefill would have produced."""
+        r, slot = fl.request, fl.slot
+        del self._disagg[r.rid]
+        if r.rid in self._redispatch:
+            self._redispatch.remove(r.rid)
+        self.prefill_calls += 1
+        self.prefill_batches.append(1)
+        if r.blocks:
+            rows = np.full((int(self.cache["block_tbl"].shape[1]),), -1,
+                           np.int32)
+            rows[:len(r.blocks)] = r.blocks
+            self.cache["block_tbl"] = \
+                self.cache["block_tbl"].at[slot].set(jnp.asarray(rows))
+        if not r.out_tokens:
+            tok = self._sample(jnp.asarray(np.asarray(logits)),
+                               r.temperature, self._next_key())
+            r.out_tokens.append(int(tok))
+            r.t_first = time.time()
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                r.t_done = r.t_first
+                self.finished.append(r)
+                self._release_slot(slot, r)
+                return
+        # a resumed re-prefill keeps its retained tokens: the sample
+        # these logits would re-derive is already on the host
+        self.slot_len[slot] = len(r.feed_tokens)
+        r.slot = int(slot)
+        self.active[slot] = r
+        if self._prefix is not None and r.blocks:
+            hashes = chain_hashes(r.feed_tokens, self.block_len)
+            r.prefix_hashes = list(hashes)
+            self._prefix.insert(hashes, r.blocks[:len(hashes)], fl.group)
+            self._prefix.misses += 1
+
+    def _abort_flight(self, fl: _DisaggFlight) -> None:
+        """Take a flight out of service: journal dropped, blocks
+        released, slot returned.  The fleet-side cancel makes any late
+        chunks from a still-running worker drop on the floor."""
+        r = fl.request
+        self._disagg.pop(r.rid, None)
+        if r.rid in self._redispatch:
+            self._redispatch.remove(r.rid)
+        if self._fleet is not None:
+            self._fleet.cancel(r.rid)
+        if r.blocks:
+            self._release_blocks(r.blocks)
+            r.blocks = []
+        self.free_slots.append(fl.slot)
+        self.slot_len[fl.slot] = 0
+        fl.acked = 0
+
+    def _on_worker_error(self, rid: int, err: str) -> None:
+        """A worker's prefill *raised* for this request (poison input,
+        not a process death): re-dispatching would loop forever, so the
+        flight aborts and the request re-queues marked inline-only."""
+        fl = self._disagg.get(rid)
+        if fl is None:
+            return
+        r = fl.request
+        self._abort_flight(fl)
+        self._inline_poison.add(rid)
+        self.pending.insert(0, r)
+
+    def _shed_expired_flights(self) -> None:
+        """Deadline shedding composes with disagg: a request whose
+        deadline passes mid-prefill sheds exactly like a pending one —
+        blocks released, same ``Request.error`` surface."""
+        if not self._disagg:
+            return
+        if not any(fl.request.deadline is not None
+                   for fl in self._disagg.values()):
+            return
+        now = time.time()
+        for fl in list(self._disagg.values()):
+            r = fl.request
+            if r.deadline is not None and now > r.deadline:
+                self._abort_flight(fl)
+                self._shed(r, f"deadline missed during disagg prefill "
+                              f"(tick {self.tick})")
+
+    def _enter_degraded(self) -> None:
+        """Every fleet slot retired past its restart budget: flip to
+        in-process prefill under a typed ``DegradedMode`` and re-queue
+        the orphaned flights at the front of the pending queue, oldest
+        first.  Token-identical under greedy sampling — the inline
+        re-prefill rebuilds exactly the KV the workers would have
+        streamed."""
+        if self.degraded is not None:
+            return
+        self.degraded = dataclasses.replace(self._fleet.degraded,
+                                            at_tick=self.tick)
+        for rid in sorted(self._disagg.keys(), reverse=True):
+            fl = self._disagg[rid]
+            self._abort_flight(fl)
+            self.pending.insert(0, fl.request)
+        self._redispatch = []
+        self._fleet.shutdown()
+
+    def _poll_disagg(self) -> None:
+        """Drain fleet events: scatter arrived chunks, complete
+        finished prefills, queue re-dispatches for rids a worker death
+        orphaned, degrade when the whole fleet has retired — then retry
+        queued re-dispatches (resuming at the last acked block
+        boundary, never past the final block so the worker always has
+        at least one tail token to derive the logits from)."""
+        if self._fleet is None or self.degraded is not None:
+            return
+        for ev in self._fleet.poll():
+            kind = ev[0]
+            if kind == "chunk":
+                fl = self._disagg.get(ev[1])
+                if fl is not None:
+                    self._on_chunk(fl, ev[2], ev[3], ev[4])
+            elif kind == "done":
+                fl = self._disagg.get(ev[1])
+                if fl is not None:
+                    self._complete_prefill(fl, ev[2])
+            elif kind == "dead":
+                if ev[1] in self._disagg \
+                        and ev[1] not in self._redispatch:
+                    self._redispatch.append(ev[1])
+            elif kind == "error":
+                self._on_worker_error(ev[1], ev[2])
+        if self._fleet.degraded is not None:
+            self._enter_degraded()
+            return
+        still: List[int] = []
+        for rid in self._redispatch:
+            fl = self._disagg.get(rid)
+            if fl is None:
+                continue
+            start = min(fl.acked, fl.nb_feed - 1) if fl.request.blocks \
+                else 0
+            if not self._dispatch_prefill(fl.request, fl.slot,
+                                          start_block=start, flight=fl):
+                still.append(rid)
+        self._redispatch = still
+
     def _admit(self) -> None:
         """Bucketed batched admission: all pending prompts sharing the
         head-of-line's bucket — feed length, plus skipped-prefix length
@@ -1009,7 +1433,14 @@ class ServeEngine:
         request, admission waits for a finisher — head-of-line
         blocking, so exhaustion delays rather than starves (and
         ``run_until_idle`` raises on true deadlock).
+
+        In disagg mode admission routes through
+        :meth:`_admit_disagg` instead (dispatch to the worker fleet;
+        rides still inline).
         """
+        if self._fleet is not None and self.prefill_mode == "disagg":
+            self._admit_disagg()
+            return
         self._promo_map.clear()        # promoted-id map is per admission
         while self.pending and self.free_slots:
             head = self.pending[0]
@@ -1791,7 +2222,9 @@ class ServeEngine:
             # reset the watermark only ever ratchets down, so one
             # transient dip reads as a permanently hot sub-pool forever
             self._alloc.reset_low_water()
+        self._poll_disagg()
         self._shed_expired_pending()
+        self._shed_expired_flights()
         self._readmit_preempted()
         self._admit()
         self._ensure_grants()
@@ -1800,6 +2233,10 @@ class ServeEngine:
         # tick's decode: the async device_put streams in underneath it
         self._stage_prefetch()
         if not self.active:
+            if self._disagg:
+                # only flights in play: workers are computing off-process;
+                # don't spin the tick counter at memory speed waiting
+                time.sleep(0.01)
             self._observe_tick(t0)
             return 0
         # per-slot positions: every slot decodes at its own offset.  Freed
@@ -1864,17 +2301,19 @@ class ServeEngine:
         remains after ``max_ticks``: a deadlocked admission loop must
         not be indistinguishable from success."""
         ticks = 0
-        while self.pending or self.active or self.preempted:
+        while self.pending or self.active or self.preempted or self._disagg:
             if ticks >= max_ticks:
                 stuck = sorted(
                     [r.rid for r in self.pending]
                     + [r.rid for r in self.active.values()]
-                    + [p.request.rid for p in self.preempted])
+                    + [p.request.rid for p in self.preempted]
+                    + list(self._disagg.keys()))
                 raise TimeoutError(
                     f"run_until_idle: {len(stuck)} request(s) still live "
                     f"after {max_ticks} ticks (pending={len(self.pending)} "
                     f"active={len(self.active)} "
-                    f"preempted={len(self.preempted)}): rids {stuck}")
+                    f"preempted={len(self.preempted)} "
+                    f"disagg={len(self._disagg)}): rids {stuck}")
             self.step()
             ticks += 1
         return self.finished
