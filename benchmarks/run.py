@@ -152,6 +152,113 @@ def table1_specialization() -> None:
          f"vs_warm_process_cold={us_cold/us_disk:.1f}x "
          f"(tier value = surviving restarts, not beating warm recompiles)")
 
+    _wire_compression_rows()
+
+
+def _wire_compression_rows() -> None:
+    """finetune_128's modeled wire cut, measured: the lowered int8+EF
+    train step vs the fp32 baseline on a real 2x4 host mesh (subprocess
+    with forced devices), with the wire proof counted off the compiled
+    HLO — gradient-sized all-reduces whose replica groups span the DATA
+    axis, by dtype (model-axis megatron activation reduces are shipped
+    identically by both steps and excluded by the replica-group test),
+    and the loss gap after 4 steps showing EF keeps the trajectory."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import re, time
+        import numpy as np
+        import jax
+        from repro.configs import ShapeConfig, get_arch
+        from repro.core.pipeline import specialize
+        from repro.models import synthetic_batch
+        from repro.optim.adamw import OptConfig
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        arch = get_arch("qwen3-8b").reduced()
+        shape = ShapeConfig("finetune_wire", "train", 64, 8)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+        def run(gc):
+            plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                              mesh_shape=(2, 4), cache=False,
+                              grad_compression=gc)
+            tr = Trainer(plan, mesh, TrainerConfig(n_steps=1, ckpt_every=0),
+                         opt_cfg=OptConfig(total_steps=8),
+                         arch=arch, shape=shape)
+            state = tr.init_state()
+            losses = []
+            for i in range(4):
+                b = synthetic_batch(arch, shape, jax.random.PRNGKey(50 + i))
+                state, m = tr.step_fn(state, b)
+                losses.append(float(m["loss"]))
+            # time the canonical jitted step (state threads through the
+            # donation) — a re-jit of the bare fn would drop the batch's
+            # data-axis sharding and with it the very wire being counted
+            b = synthetic_batch(arch, shape, jax.random.PRNGKey(50))
+            txt = tr.step_fn.lower(state, b).compile().as_text()
+            ts = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                state, m = tr.step_fn(state, b)
+                jax.block_until_ready((state, m))
+                ts.append(time.perf_counter() - t0)
+            # The wire = collectives whose replica groups span the DATA
+            # axis of the (2,4) data x model mesh: {{0,4},{1,5},...} in
+            # literal form, [4,2]<=[2,4] in iota form. Model-axis
+            # activation reduces ({{0,1,2,3},...} / [2,4]<=[8]) are the
+            # same in both steps; size alone cannot separate the two on
+            # the reduced arch (both top out at 16384 elements).
+            fx = sx = 0
+            for line in txt.splitlines():
+                m = re.search(
+                    r"= (\\w+)\\[([\\d,]*)\\]\\S* (all-reduce|"
+                    r"reduce-scatter)\\(", line)
+                if m is None:
+                    continue
+                n = int(np.prod([int(t) for t in m.group(2).split(",")
+                                 if t] or [1]))
+                xdata = ("replica_groups={{0,4}" in line
+                         or "replica_groups=[4,2]<=[2,4]" in line)
+                if n < 4096 or not xdata:
+                    continue   # scales, loss/grad-norm scalars, TP reduces
+                if m.group(1) in ("f32", "bf16", "f64"):
+                    fx += 1
+                elif m.group(1) == "s16":
+                    sx += 1
+            return float(np.median(ts)) * 1e6, losses, fx, sx
+
+        us_off, l_off, fx_off, _ = run("off")
+        us_on, l_on, fx_on, sx_on = run("on")
+        gap = max(abs(a - b) for a, b in zip(l_on, l_off))
+        print("ROW=train_step/finetune_128/fp32_wire,%.1f,"
+              "grad_reduce=fp32;grad_sized_xdata_float_allreduce=%d"
+              % (us_off, fx_off))
+        print("ROW=train_step/finetune_128/int8_ef_wire,%.1f,"
+              "grad_reduce=int16 code sum;grad_sized_xdata_s16_allreduce=%d;"
+              "grad_sized_xdata_float_allreduce=%d;loss_gap_4steps=%.1e;"
+              "vs_fp32=%.2fx" % (us_on, sx_on, fx_on, gap,
+                                 us_off / max(us_on, 1e-9)))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": str(
+            Path(__file__).resolve().parents[1] / "src"),
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    rows = [l[4:] for l in out.stdout.splitlines() if l.startswith("ROW=")]
+    if out.returncode == 0 and rows:
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            emit(name, float(us), derived)
+    else:
+        emit("train_step/finetune_128/int8_ef_wire", 0.0,
+             "subprocess failed: " + out.stderr.strip()[-200:])
+
 
 # ---------------------------------------------------------------------
 def table2_kernels() -> None:
@@ -185,6 +292,7 @@ def table2_kernels() -> None:
          f"tpu_stream_us={cache_bytes/tgt.hbm_bw*1e6:.1f}")
 
     _decode_step_rows(ks, H, K, D)
+    _combine_topology_rows(H, K, D)
     _paged_occupancy_rows(ks, H, K, D)
     _admission_occupancy_rows(ks, H, K, D)
     _paged_2d_occupancy_rows(H, K, D)
@@ -290,6 +398,68 @@ def _decode_step_rows(ks, H, K, D) -> None:
     else:
         emit("decode_step/shard_map_flash/mixed_fill", 0.0,
              "subprocess failed: " + out.stderr.strip()[-200:])
+
+
+def _combine_topology_rows(H, K, D) -> None:
+    """The model-axis softmax-combine topologies head-to-head: flat
+    (pmax + 2 psums), ring (neighbor ppermute walk), and bidirectional
+    ring at model degrees 4 / 8 / 16 on forced host devices — one
+    subprocess per degree (the device count is a process-level flag).
+    Host-CPU timings rank XLA's fused collectives, not ICI hop counts,
+    so the hops=... column carries the modeled cost the thresholds in
+    ``choose_combine_topology`` actually compare."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    B, S = 8, 4096
+    for m in (4, 8, 16):
+        code = textwrap.dedent(f"""
+            import jax, jax.numpy as jnp, numpy as np, time
+            from repro.core.costmodel import combine_hops
+            from repro.dist.flash_decode import flash_decode
+            B, S, H, K, D, m = {B}, {S}, {H}, {K}, {D}, {m}
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, 1, H, D)).astype(jnp.bfloat16)
+            kn = jax.random.normal(ks[1], (B, 1, K, D)).astype(jnp.bfloat16)
+            vn = jax.random.normal(ks[2], (B, 1, K, D)).astype(jnp.bfloat16)
+            kc = jax.random.normal(ks[1], (B, S, K, D)).astype(jnp.bfloat16)
+            vc = jax.random.normal(ks[2], (B, S, K, D)).astype(jnp.bfloat16)
+            pos = jnp.asarray(np.linspace(64, S - 1, B).astype(np.int32))
+            mesh = jax.make_mesh((1, m), ("data", "model"))
+            for topo in ("flat", "ring", "bidir"):
+                fn = jax.jit(lambda *a, t=topo: flash_decode(
+                    *a, mesh=mesh, combine=t))
+                for _ in range(2):
+                    jax.block_until_ready(fn(q, kn, vn, kc, vc, pos, 0))
+                ts = []
+                for _ in range(10):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(q, kn, vn, kc, vc, pos, 0))
+                    ts.append(time.perf_counter() - t0)
+                print("ROW=decode_step/combine/%s@tp%d,%.1f,"
+                      "hops=%d;seq-sharded model=%d"
+                      % (topo, m, float(np.median(ts)) * 1e6,
+                         combine_hops(m, topo), m))
+        """)
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=600,
+            env={**os.environ, "PYTHONPATH": str(
+                Path(__file__).resolve().parents[1] / "src"),
+                "JAX_PLATFORMS": "cpu",
+                "XLA_FLAGS":
+                    f"--xla_force_host_platform_device_count={m}"})
+        rows = [l[4:] for l in out.stdout.splitlines()
+                if l.startswith("ROW=")]
+        if out.returncode == 0 and rows:
+            for row in rows:
+                name, us, derived = row.split(",", 2)
+                emit(name, float(us), derived)
+        else:
+            emit(f"decode_step/combine/flat@tp{m}", 0.0,
+                 "subprocess failed: " + out.stderr.strip()[-200:])
 
 
 def _paged_occupancy_rows(ks, H, K, D) -> None:

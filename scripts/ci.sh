@@ -10,7 +10,12 @@
 #   scripts/ci.sh --dist     # multi-device lane: test_multidevice on 8
 #                            # forced host devices (shard_map seq-sharded
 #                            # + 2-D pool-sharded paths run for real, not
-#                            # only when a developer remembers the flag)
+#                            # only when a developer remembers the flag),
+#                            # plus the combine-topology oracle matrix
+#                            # (ring/bidir vs flat vs gather oracle) and
+#                            # the int8+EF trajectory-equivalence layer
+#                            # (lowered wire step vs fp32 baseline, HLO
+#                            # wire proof)
 #   scripts/ci.sh --chaos    # fault-injection lane: seeded soak of the
 #                            # grow-on-demand serving path (random grant
 #                            # denials + simulated slow ticks) asserting
@@ -112,6 +117,11 @@ if [[ "${1:-}" == "--dist" ]]; then
     XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
         run_lane "dist: test_multidevice under 8 forced host devices" \
         python -m pytest -x -q tests/test_multidevice.py
+    run_lane "dist: combine-topology matrix (ring/bidir vs flat vs oracle)" \
+        python -m pytest -x -q tests/test_multidevice.py \
+        -k "combine_topology_matrix or ring_combine"
+    run_lane "dist: int8+EF trajectory equivalence vs fp32 (2x4 wire)" \
+        python -m pytest -x -q tests/test_train_equivalence.py
     summary
 fi
 

@@ -518,6 +518,71 @@ def kv_prefill_split(
 
 
 # ---------------------------------------------------------------------------
+# decode combine topology (communication pass)
+# ---------------------------------------------------------------------------
+
+#: legal values of ``comm.combine_topology`` (and the kernels' ``combine=``)
+COMBINE_TOPOLOGIES = ("flat", "ring", "bidir")
+
+#: flat < ring < bidir — the chosen topology's rank is monotone
+#: nondecreasing in the model degree (the property tests pin this)
+COMBINE_TOPOLOGY_RANK = {"flat": 0, "ring": 1, "bidir": 2}
+
+#: calibrated crossover degrees.  These are thresholds, not derivations:
+#: all three latency chains below are linear in n, and two lines cross
+#: exactly once — a linear model alone can never produce the observed
+#: flat -> ring -> bidir progression.  What the chains miss is that XLA
+#: fuses the flat combine's three tiny collectives into one launch at
+#: small n (so flat wins there despite the worse chain), while past
+#: ~one ring's worth of hops the fused launch stops amortizing and the
+#: explicit rings win on chain length.  The degrees encode where those
+#: regimes flip on the reference ICI mesh.
+COMBINE_RING_DEGREE = 8          # flat while model degree <= this
+COMBINE_BIDIR_DEGREE = 16       # ring while model degree <= this
+
+
+def choose_combine_topology(model_degree: int) -> str:
+    """Pick the model-axis softmax-combine topology for a decode step.
+
+    A degenerate model axis (degree <= 1) has no cross-shard combine at
+    all — "flat" by definition, whatever the overrides say.  Otherwise
+    the calibrated thresholds above apply.
+    """
+    n = int(model_degree)
+    if n <= COMBINE_RING_DEGREE:
+        return "flat"
+    if n <= COMBINE_BIDIR_DEGREE:
+        return "ring"
+    return "bidir"
+
+
+def combine_hops(model_degree: int, topology: str) -> int:
+    """Latency-chain length (dependent neighbor hops) of one combine.
+
+    * ``flat``  — pmax + two psums, each a 2(n-1)-hop ring all-reduce:
+      ``6(n-1)`` chained hops before fusion.
+    * ``ring``  — one packed (m, l, acc) all-gather around the ring:
+      ``n-1`` hops.
+    * ``bidir`` — the same gather split across both ring directions:
+      ``ceil((n-1)/2)`` hops on the longer arm.
+
+    Hop *count* is the narrative number the decision log reports; the
+    crossovers themselves are the calibrated degrees above.
+    """
+    n = int(model_degree)
+    if n <= 1:
+        return 0
+    if topology == "flat":
+        return 6 * (n - 1)
+    if topology == "ring":
+        return n - 1
+    if topology == "bidir":
+        return (n - 1 + 1) // 2
+    raise ValueError(f"unknown combine topology {topology!r}; "
+                     f"expected one of {COMBINE_TOPOLOGIES}")
+
+
+# ---------------------------------------------------------------------------
 # VMEM tiling model (local partitioning pass)
 # ---------------------------------------------------------------------------
 

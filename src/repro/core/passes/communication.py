@@ -78,6 +78,9 @@ class CommunicationPass(Pass):
             plan.estimates["est_collective_s_int8"] = raw.collective_s * ratio
             collective_bound = raw.collective_s > 0 and \
                 raw.collective_s >= max(raw.compute_s, raw.memory_s)
+            forced_gc = ctx.options.get("grad_compression")
+            if forced_gc is not None:
+                collective_bound = forced_gc == "on"
             if collective_bound:
                 comm.compress_grads = True
                 comm.compress_bits = 8
@@ -89,6 +92,7 @@ class CommunicationPass(Pass):
                     error_feedback=True)
                 self.record(
                     ctx, "grad_compression", "int8 + error feedback (ICI)",
+                    "forced by options" if forced_gc is not None else
                     f"step is collective-bound "
                     f"(coll {raw.collective_s*1e3:.2f}ms >= compute "
                     f"{raw.compute_s*1e3:.2f}ms, mem {raw.memory_s*1e3:.2f}ms"
@@ -98,12 +102,44 @@ class CommunicationPass(Pass):
             else:
                 self.record(
                     ctx, "grad_compression", "off",
+                    "forced by options" if forced_gc is not None else
                     f"step not collective-bound (coll "
                     f"{raw.collective_s*1e3:.2f}ms < max(compute "
                     f"{raw.compute_s*1e3:.2f}ms, mem {raw.memory_s*1e3:.2f}"
                     "ms)): full-precision reduction overlaps for free; "
                     "compression would only add quantization noise")
             plan.estimates["grad_compress"] = float(comm.compress_grads)
+
+            # ---- lowering verdict: do codes actually cross the wire? ------
+            # The modeled volume cut only becomes real if the train step
+            # can replace its f32 reduction with the int16 code sum; the
+            # shared wire_compression predicate decides, and the artifact
+            # records the verdict so `plan show` never claims a cut the
+            # lowered step does not deliver.
+            if comm.compress_grads:
+                from repro.core.passes.lowering import wire_compression
+                dp = wire_compression(plan, None, ctx.arch)
+                comm.compress_lowered = dp > 0
+                if dp:
+                    # key presence == lowered: gate-refused plans render
+                    # through the same "post-reduce" fallback as
+                    # artifacts stored before the wire lowering existed
+                    plan.estimates["grad_compress_lowered"] = float(dp)
+                    self.record(
+                        ctx, "grad_compress_lowering",
+                        f"int16 code sum on the wire (dp={dp})",
+                        "vmap-sliced grads quantize against a shared scale "
+                        "and the per-slice int8 codes sum across the data "
+                        f"axes in int16 ({dp} * 127 = {dp * 127} <= 32767): "
+                        "the step's only gradient-sized cross-data "
+                        "collective runs in integer dtype")
+                else:
+                    self.record(
+                        ctx, "grad_compress_lowering", "post-reduce EF",
+                        "wire gate failed (FSDP shard layout, batch not "
+                        "divisible by dp x microbatches, dp > 256, or "
+                        "shard_map MoE dispatch): EF still models the "
+                        "compression but the reduction stays full-precision")
 
             # ---- microbatching: activation budget + comm overlap ----------
             est = estimate_step(ctx.ir, axis_map, mesh, tgt, training=True,
@@ -170,6 +206,37 @@ class CommunicationPass(Pass):
                 self.name, "decode with on-chip constant state only")
         self.record(ctx, "prefetch_depth", str(comm.prefetch_depth),
                     "hide host->HBM latency behind step compute")
+
+        # ---- decode combine topology -------------------------------------
+        # The flash-decode softmax combine crosses the model axis every
+        # tick; its wire pattern (flat psums vs a packed ring gather) is
+        # a per-mesh-geometry choice the plan records like kv_residency,
+        # so every consumer (kernels, engine, benchmarks) dispatches the
+        # same way.
+        if ctx.shape.kind == "decode" and ctx.arch.has_attention:
+            from repro.core.costmodel import (choose_combine_topology,
+                                              combine_hops)
+            msize = mesh.axis_size("model") if "model" in mesh.axes else 1
+            forced_ct = ctx.options.get("combine_topology")
+            if msize <= 1:
+                topo = "flat"
+                why = "model degree 1: no cross-shard combine exists"
+            elif forced_ct is not None:
+                topo = forced_ct
+                why = "forced by options"
+            else:
+                topo = choose_combine_topology(msize)
+                hops = {t: combine_hops(msize, t)
+                        for t in ("flat", "ring", "bidir")}
+                why = (f"model degree {msize}: latency chains flat="
+                       f"{hops['flat']} hops (3 collectives XLA fuses at "
+                       f"small degrees), ring={hops['ring']}, bidir="
+                       f"{hops['bidir']} -> {topo} at the calibrated "
+                       "crossover degrees (8/16)")
+            comm.combine_topology = topo
+            plan.estimates["combine_topology"] = topo
+            plan.estimates["combine_hops"] = float(combine_hops(msize, topo))
+            self.record(ctx, "combine_topology", topo, why)
 
         # ---- channel configuration ---------------------------------------
         ctx.template["channel.ici"].refine(

@@ -29,7 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig, get_arch, get_shape
 from repro.core.plan import MemoryPlan
-from repro.dist.collectives import ef_compress, ef_state
+from repro.dist.collectives import compressed_slice_sum, ef_compress, ef_state
 from repro.dist.sharding import (
     cache_pspecs,
     mesh_sizes,
@@ -92,10 +92,64 @@ def build_run_cfg(plan: MemoryPlan, arch: ArchConfig,
         remat=plan.comm.remat_policy,
         moe_impl=moe_impl if isinstance(moe_impl, str) else "gshard_einsum",
         decode_impl=str(plan.estimates.get("decode_impl", "xla")),
+        combine_topology=(str(plan.estimates["combine_topology"])
+                          if "combine_topology" in plan.estimates else None),
         mesh=mesh,
         data_axes=data_axes,
         model_axis="model",
     )
+
+
+def wire_compression(plan: MemoryPlan, mesh: Optional[Mesh] = None,
+                     arch: Optional[ArchConfig] = None) -> int:
+    """Data-parallel degree of the *lowered* compressed reduction, or 0.
+
+    The single source of truth for whether the train step runs the
+    int8+EF collective on the wire (codes crossing the data axis instead
+    of f32 gradients): the communication pass records its verdict
+    through this predicate and the trainer sizes the EF state by it, so
+    the plan artifact and the lowered step can never disagree.  Gates:
+
+    * the plan asked for full-DP compression (``comm.compress_grads``);
+    * not an FSDP strategy — there the params themselves shard over the
+      data axes and the reduction is a reduce-scatter fused into the
+      sharded update, not a standalone all-reduce to replace;
+    * a real data degree that divides the global batch (per-slice grads
+      come from equal contiguous batch slices) with ``dp * nmicro``
+      granularity when microbatched;
+    * ``dp <= 256`` — shared-scale int16 code sums overflow past that;
+    * not shard_map MoE dispatch (a shard_map inside the vmapped slice
+      body would see a batch axis the mesh does not have).
+    """
+    comm = plan.comm
+    if not comm.compress_grads:
+        return 0
+    if str(plan.estimates.get("strategy", "")).startswith("fsdp"):
+        return 0
+    sizes = mesh_sizes(mesh) if mesh is not None \
+        else dict(zip(plan.mesh_axes, plan.mesh_shape))
+    ba = plan.axis_rules.get("batch")
+    axes = (ba,) if isinstance(ba, str) else tuple(ba or ())
+    dp = 1
+    for a in axes:
+        dp *= sizes.get(a, 1)
+    if dp <= 1 or dp > 256:
+        return 0
+    nmicro = max(comm.microbatches, 1)
+    if int(plan.global_batch) % (dp * nmicro):
+        return 0
+    if arch is not None and arch.is_moe and \
+            str(plan.estimates.get("moe_impl", "")) == "shard_map_alltoall":
+        return 0
+    return dp
+
+
+def _dp_entry(plan: MemoryPlan, sizes) -> Any:
+    """The batch rule's mesh assignment for the stacked EF/slice axis."""
+    ba = plan.axis_rules.get("batch")
+    axes = (ba,) if isinstance(ba, str) else tuple(ba or ())
+    live = tuple(a for a in axes if sizes.get(a, 1) > 1)
+    return live[0] if len(live) == 1 else live
 
 
 def _padded(plan: MemoryPlan):
@@ -164,6 +218,9 @@ def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
     opt_cfg = opt_cfg or adamw.OptConfig.from_plan(plan)
     nmicro = max(plan.comm.microbatches, 1)
     compress = plan.comm.compresses_gradients
+    # > 0: the reduction itself is lowered to int16 code sums (the wire
+    # path); 0 with compress on: post-reduce EF modeling only
+    wire_dp = wire_compression(plan, mesh, arch)
 
     pshapes = lm.param_shapes(arch, *_padded(plan))
     ppspecs = _param_pspecs(plan, arch, sizes)
@@ -183,9 +240,20 @@ def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
             lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes)
         opt_pspecs["master"] = ppspecs
     if compress:
-        opt_shapes["ef"] = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), pshapes)
-        opt_pspecs["ef"] = ppspecs
+        if wire_dp:
+            # one residual per DP slice, stacked on a leading axis the
+            # data axes shard (each slice quantizes its own codes)
+            dpe = _dp_entry(plan, sizes)
+            opt_shapes["ef"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((wire_dp,) + tuple(s.shape),
+                                               jnp.bfloat16), pshapes)
+            opt_pspecs["ef"] = jax.tree.map(
+                lambda p: P(dpe, *tuple(p)), ppspecs,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            opt_shapes["ef"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), pshapes)
+            opt_pspecs["ef"] = ppspecs
 
     state_shapes = {"params": pshapes, "opt": opt_shapes}
     state_pspecs = {"params": ppspecs, "opt": opt_pspecs}
@@ -197,6 +265,90 @@ def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
     # which dim of each input is the batch dim (positions: (3,B,S) -> 1)
     batch_dims = {k: (ax.index("batch") if "batch" in ax else None)
                   for k, ax in frontends.input_axes(arch, shape).items()}
+
+    def wire_train_step(state, batch):
+        """The lowered compressed reduction: no f32 gradient all-reduce
+        exists in this step.  vmap over contiguous per-data-shard batch
+        slices yields stacked per-slice grads with NO implicit DP
+        reduction; each leaf then quantizes against a shared scale and
+        the int16 *code sum* over the stacked axis is the only
+        gradient-sized cross-data operation GSPMD emits (wrapping the
+        model in shard_map instead is off the table: the layer scan
+        inside ``lm.train_loss`` breaks the partial-auto partitioner).
+        EF residuals live per slice — ``opt["ef"]`` leaves carry a
+        leading ``(dp,)`` axis sharded like the batch."""
+        params = state["params"]
+        dpe = _dp_entry(plan, sizes)
+
+        def split(x, bd):
+            if bd is None:
+                return None
+            x = jnp.moveaxis(x, bd, 0)
+            # contiguous outer split: slice i lands on data shard i, so
+            # the stacked axis takes over the batch's data sharding
+            x = x.reshape(wire_dp, x.shape[0] // wire_dp, *x.shape[1:])
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dpe, *([None] * (x.ndim - 1)))))
+
+        sliced = {k: split(v, batch_dims[k]) for k, v in batch.items()}
+        moving = {k: v for k, v in sliced.items() if v is not None}
+
+        def one(mb):
+            b = {k: (jnp.moveaxis(mb[k], 0, batch_dims[k]) if k in mb
+                     else batch[k]) for k in batch}
+            if nmicro == 1:
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                return l, g
+            # grad accumulation within the slice (interleaved inner
+            # split, same rationale as the unwired micro path)
+            def msplit(x, bd):
+                x = jnp.moveaxis(x, bd, 0)
+                x = x.reshape(x.shape[0] // nmicro, nmicro, *x.shape[1:])
+                x = jnp.moveaxis(x, 1, 0)
+                return jnp.moveaxis(x, 1, bd + 1)
+            mbs = {k: msplit(v, batch_dims[k])
+                   for k, v in b.items() if batch_dims[k] is not None}
+
+            def micro(carry, mb_sliced):
+                gsum, lsum = carry
+                bb = {k: (mb_sliced[k] if batch_dims[k] is not None
+                          else b[k]) for k in b}
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, bb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+            zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params), jnp.zeros((), jnp.float32))
+            (g, lsum), _ = jax.lax.scan(micro, zero, mbs)
+            return lsum / nmicro, jax.tree.map(lambda x: x / nmicro, g)
+
+        losses, gsl = jax.vmap(one)(moving)
+
+        opt_state = dict(state["opt"])
+        ef = opt_state.pop("ef")
+        flat_g, tdef = jax.tree.flatten(gsl)
+        flat_e = jax.tree.leaves(ef)
+        out_g, out_e = [], []
+        for g, e in zip(flat_g, flat_e):
+            acc = g.astype(jnp.float32) + e.astype(jnp.float32)
+            scalar = acc.ndim == 1          # scalar param leaf: (dp,)
+            if scalar:
+                acc = acc[:, None]
+            gh, err = compressed_slice_sum(acc)
+            if scalar:
+                gh, err = gh[..., 0], err[..., 0]
+            out_g.append(gh.astype(g.dtype))
+            out_e.append(err.astype(jnp.bfloat16))
+        grads = jax.tree.unflatten(tdef, out_g)
+        new_ef = jax.tree.unflatten(tdef, out_e)
+        loss = jnp.mean(losses)
+        metrics = {"ce_loss": loss, "aux_loss": jnp.zeros(()),
+                   "tokens": jnp.asarray(shape.tokens, jnp.float32)}
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        opt_state["ef"] = new_ef
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return {"params": params, "opt": opt_state}, metrics
 
     def train_step(state, batch):
         params = state["params"]
@@ -256,7 +408,7 @@ def lower_train_step(plan: MemoryPlan, arch: ArchConfig, shape: ShapeConfig,
 
     return LoweredStep(
         kind="train",
-        fn=train_step,
+        fn=wire_train_step if wire_dp else train_step,
         in_shapes=(state_shapes, ishapes),
         in_pspecs=(state_pspecs, ipspecs),
         out_pspecs=(state_pspecs,

@@ -171,7 +171,9 @@ class CommPlan:
     grad_schedule: str = "reduce_scatter"     # or "all_reduce"
     compress_pod_grads: bool = False          # int8+error-feedback on DCN axis
     compress_grads: bool = False              # int8+EF on the full DP reduction
+    compress_lowered: bool = False            # codes (not f32) cross the wire
     compress_bits: int = 8
+    combine_topology: str = "flat"            # decode softmax combine: flat|ring|bidir
     microbatches: int = 1                     # grad-accum for comm overlap
     prefetch_depth: int = 2                   # host input pipeline depth
     overlap_collectives: bool = True          # async collective scheduling
@@ -220,7 +222,9 @@ class FrozenCommPlan:
     grad_schedule: str
     compress_pod_grads: bool
     compress_grads: bool
+    compress_lowered: bool
     compress_bits: int
+    combine_topology: str
     microbatches: int
     prefetch_depth: int
     overlap_collectives: bool

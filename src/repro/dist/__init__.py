@@ -22,6 +22,7 @@ from repro import compat as _compat  # noqa: F401
 
 from repro.dist.collectives import (  # noqa: E402,F401
     compressed_psum,
+    compressed_slice_sum,
     dequantize_int8,
     ef_compress,
     ef_state,

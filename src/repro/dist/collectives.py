@@ -12,7 +12,17 @@ ICI mesh).  The math contract, verified by the property tests:
   sum(inputs)`` (telescoping) and the time-averaged delivered gradient
   converges to the true gradient;
 * ``compressed_psum`` is a mean-reduction (gradient-averaging semantics)
-  of the *dequantized* values, returning the local residual for feedback.
+  with int16 *codes* as the wire carrier — every shard quantizes against
+  a shared (pmax'd) scale so the code sum dequantizes exactly to the sum
+  of the dequantized values — returning the local residual for feedback;
+* ``compressed_slice_sum`` is its GSPMD twin for the lowered train step:
+  the same shared-scale code summation over a stacked leading axis
+  instead of a shard_map collective, so XLA's partitioner emits the
+  reduction as an integer all-reduce (no f32 gradient ever crosses the
+  data axis — the honest wire cut the cost model priced).
+
+Shared-scale code sums overflow int16 at ``127 * n > 32767``, so both
+wire paths are gated to reduction degrees <= 256.
 """
 
 from __future__ import annotations
@@ -72,28 +82,93 @@ def ef_compress(g: jax.Array, err: Optional[jax.Array] = None
     return ghat.astype(g.dtype), new_err
 
 
-def ef_state(params) -> dict:
+def ef_state(params, replicas: int = 1) -> dict:
     """Zero-initialized error-feedback residuals, one per parameter leaf.
 
     bf16 storage: the residual is bounded by half a quantization step, so
     bf16's ~3 significant digits lose <0.5% of an already-small term.
+
+    ``replicas > 1`` is the lowered-wire layout: one residual per
+    data-parallel slice, stacked on a leading ``(replicas,)`` axis that
+    the train step shards over the data axes (each slice's residual
+    tracks what *its* codes dropped — see ``compressed_slice_sum``).
     """
-    return jax.tree.map(
-        lambda p: jnp.zeros(jnp.shape(p), jnp.bfloat16), params)
+    def zero(p):
+        shape = ((replicas,) if replicas > 1 else ()) + tuple(jnp.shape(p))
+        return jnp.zeros(shape, jnp.bfloat16)
+    return jax.tree.map(zero, params)
+
+
+def _last_dim_blocks(x32: jax.Array) -> Tuple[jax.Array, int]:
+    """``(..., d)`` -> ``(..., nb, BLOCK)`` with zero tail padding.
+
+    Blocks cut the *last* dim only (unlike :func:`quantize_int8`'s full
+    flatten) so a stacked/sharded array keeps its leading dims intact —
+    the partitioner never has to reshard to quantize.
+    """
+    d = x32.shape[-1]
+    pad = (-d) % BLOCK
+    if pad:
+        x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
+    return x32.reshape(*x32.shape[:-1], -1, BLOCK), pad
+
+
+def _unblock(blocks: jax.Array, d: int, pad: int) -> jax.Array:
+    flat = blocks.reshape(*blocks.shape[:-2], -1)
+    return flat[..., :d] if pad else flat
 
 
 def compressed_psum(x: jax.Array, axis) -> Tuple[jax.Array, jax.Array]:
     """Mean all-reduce of int8-quantized values, for use under shard_map.
 
-    Each shard quantizes locally, the *dequantized* values are averaged
-    over ``axis``, and the local quantization error is returned so the
-    caller can feed it back (:func:`ef_compress` semantics split across
-    shards).  Wire-volume model: int8 codes + one f32 scale per block =
-    ~``(bits/8 + 4/128)`` bytes/element vs 2 (bf16) or 4 (f32).
+    The wire carrier is the int16 *code sum*: every shard quantizes
+    against a shared scale (one pmax of the per-block amax), psums the
+    codes, and dequantizes the sum — identical in value to averaging the
+    dequantized shards, but the gradient-sized collective runs in int16.
+    The local quantization error is returned so the caller can feed it
+    back (:func:`ef_compress` semantics split across shards).
+    Wire-volume: int16 codes + one f32 amax per 128-block on a hop-long
+    chain vs 4 bytes/element f32.  Code sums need ``127 * n <= 32767``:
+    callers gate the path to reduction degrees <= 256.
     """
-    q, scales, pad = quantize_int8(x)
-    xq = dequantize_int8(q, scales, pad, jnp.shape(x))
-    err = (jnp.asarray(x, jnp.float32) - xq).astype(x.dtype)
+    x32 = jnp.asarray(x, jnp.float32)
+    d = x32.shape[-1]
+    blocks, pad = _last_dim_blocks(x32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(blocks), axis=-1), axis)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127.0, 127.0)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
-    y = jax.lax.psum(xq, axis) / n
-    return y.astype(x.dtype), err
+    qsum = jax.lax.psum(q.astype(jnp.int16), axis)
+    y = _unblock(qsum.astype(jnp.float32) * scale[..., None], d, pad) / n
+    err = x32 - _unblock(q * scale[..., None], d, pad)
+    return y.astype(x.dtype), err.astype(x.dtype)
+
+
+def compressed_slice_sum(stacked: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Shared-scale code-sum mean over a stacked ``(r, ...)`` axis.
+
+    The lowered train step's reduction primitive: ``stacked`` holds one
+    gradient slice per data-parallel replica on the leading axis (which
+    the caller shards over the data axes).  Each slice quantizes against
+    the scale shared across *all* slices, the int16 codes are summed
+    over the stacked axis — the one gradient-sized cross-data operation,
+    which GSPMD lowers as an integer all-reduce — and the sum dequantizes
+    to the mean.  Returns ``(mean, err)``: the delivered f32 mean (full
+    leaf shape) and the per-slice f32 residual (leading ``(r,)`` kept)
+    satisfying ``err[i] == stacked[i] - dequant(codes[i])`` exactly, so
+    ``mean + mean_i(err[i]) == mean_i(stacked[i])`` (the telescoping
+    identity the trajectory tests pin).
+    """
+    r = stacked.shape[0]
+    a32 = jnp.asarray(stacked, jnp.float32)
+    d = a32.shape[-1]
+    blocks, pad = _last_dim_blocks(a32)
+    amax = jnp.max(jnp.max(jnp.abs(blocks), axis=-1), axis=0)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[None, ..., None]), -127.0, 127.0)
+    qsum = jnp.sum(q.astype(jnp.int16), axis=0, dtype=jnp.int16)
+    mean = _unblock(qsum.astype(jnp.float32) * scale[..., None],
+                    d, pad) / r
+    err = a32 - _unblock(q * scale[None, ..., None], d, pad)
+    return mean, err

@@ -54,6 +54,94 @@ def uses_seq_sharding(mesh, seq_len: int, model_axis: str = "model") -> bool:
     return msize > 1 and seq_len % msize == 0
 
 
+def combine_topology(mesh, *, model_axis: str = "model",
+                     override=None) -> str:
+    """Which model-axis softmax-combine topology a decode step runs —
+    the single dispatch predicate shared by :func:`flash_decode`,
+    :func:`flash_decode_paged` and ``ServeEngine.decode_path``
+    (mirroring :func:`uses_seq_sharding` / :func:`pool_sharding_kind`).
+
+    ``override`` is a plan- or caller-pinned topology ("flat" | "ring" |
+    "bidir"); without one the cost model's calibrated thresholds choose.
+    A degenerate model axis (degree <= 1) has no cross-shard combine, so
+    it reports "flat" regardless of the override.
+    """
+    from repro.core.costmodel import (COMBINE_TOPOLOGIES,
+                                      choose_combine_topology)
+    msize = mesh_sizes(mesh).get(model_axis, 1)
+    if msize <= 1:
+        return "flat"
+    if override is not None:
+        if override not in COMBINE_TOPOLOGIES:
+            raise ValueError(f"unknown combine topology {override!r}; "
+                             f"expected one of {COMBINE_TOPOLOGIES}")
+        return override
+    return choose_combine_topology(msize)
+
+
+def _ring_allgather(v: jax.Array, axis: str, n: int,
+                    bidir: bool = False) -> jax.Array:
+    """All-gather ``v`` into an ``(n, ...)`` source-indexed buffer via
+    neighbor ppermutes: ``out[j]`` holds shard ``j``'s value on every
+    shard.  ``bidir`` splits the walk across both ring directions —
+    ``ceil((n-1)/2)`` forward + ``floor((n-1)/2)`` backward hops instead
+    of ``n-1`` (the arms fill disjoint source slots: a collision would
+    need ``t_fwd + t_bwd == n``, and the arms sum to at most ``n-1``).
+    """
+    idx = jax.lax.axis_index(axis)
+    out = jnp.zeros((n,) + v.shape, v.dtype).at[idx].set(v)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    w = v
+    for t in range(1, (n // 2 if bidir else n - 1) + 1):
+        w = jax.lax.ppermute(w, axis, fwd)
+        out = out.at[(idx - t) % n].set(w)
+    if bidir:
+        w = v
+        for t in range(1, (n - 1) // 2 + 1):
+            w = jax.lax.ppermute(w, axis, bwd)
+            out = out.at[(idx + t) % n].set(w)
+    return out
+
+
+def _combine(m: jax.Array, l: jax.Array, acc: jax.Array,
+             model_axis: str, msize: int, topology: str
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-shard online-softmax combine of partial ``(m, l, acc)``.
+
+    * ``flat``  — pmax + two psums (three launches XLA fuses at small
+      model degrees);
+    * ``ring`` / ``bidir`` — ONE packed all-gather of the concatenated
+      ``(m, l, acc)`` payload around the ring, then a local reduction.
+
+    The local reduction folds sources *sequentially in source order* —
+    the same order a host all-reduce applies — so ring and bidir are
+    bitwise-identical to each other (same gathered buffer, same fold)
+    and match flat to the last ulp (XLA fuses flat's reduce computation
+    with the surrounding exp/mul, which can re-round one step; the
+    multidevice oracle matrix pins both properties).
+    """
+    if topology == "flat":
+        m_glob = jax.lax.pmax(m, model_axis)
+        coef = jnp.exp(m - m_glob)
+        return (jax.lax.psum(l * coef, model_axis),
+                jax.lax.psum(acc * coef[..., None], model_axis))
+    packed = jnp.concatenate([m[..., None], l[..., None], acc], axis=-1)
+    g = _ring_allgather(packed, model_axis, msize,
+                        bidir=(topology == "bidir"))
+    ms, ls, accs = g[..., 0], g[..., 1], g[..., 2:]
+    m_glob = ms[0]
+    for i in range(1, msize):
+        m_glob = jnp.maximum(m_glob, ms[i])
+    coef = jnp.exp(ms - m_glob[None])
+    lw, aw = ls * coef, accs * coef[..., None]
+    l_glob, acc_glob = lw[0], aw[0]
+    for i in range(1, msize):
+        l_glob = l_glob + lw[i]
+        acc_glob = acc_glob + aw[i]
+    return l_glob, acc_glob
+
+
 def _append(cache: jax.Array, new: jax.Array, idx: jax.Array,
             in_range: jax.Array) -> jax.Array:
     """Per-slot write of ``new[b]`` at seq offset ``idx[b]`` iff
@@ -114,12 +202,16 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
                  mesh: jax.sharding.Mesh,
                  data_axes: Tuple[str, ...] = ("data",),
                  model_axis: str = "model",
+                 combine=None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step against a (batch, seq)-sharded cache.
 
     Returns ``(ctx, k_cache', v_cache')`` with ``ctx`` of shape
     ``(B, 1, H, D)``.  Falls back to an unsharded single-shard path when
     the model axis cannot shard the seq dim (size 1 or non-divisible).
+    ``combine`` pins the cross-shard softmax-combine topology (a plan's
+    recorded ``comm.combine_topology``); ``None`` asks the shared
+    :func:`combine_topology` predicate.
     """
     pos = jnp.asarray(pos, jnp.int32)
     window = jnp.asarray(window, jnp.int32)
@@ -141,6 +233,9 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
     bspec = None
     if dsize > 1 and B % dsize == 0:
         bspec = dnames[0] if len(dnames) == 1 else dnames
+    msize = sizes[model_axis]
+    topology = combine_topology(mesh, model_axis=model_axis,
+                                override=combine)
 
     def local_fn(q, kn, vn, kc, vc, pos, window):
         Sl = kc.shape[1]
@@ -151,10 +246,7 @@ def flash_decode(q: jax.Array,            # (B, 1, H, D)
         vc = _append(vc, vn, jnp.clip(lp, 0, Sl - 1), in_range)
         kpos = start + jnp.arange(Sl)
         m, l, acc = _partial_attend(q, kc, vc, kpos, pos, window)
-        m_glob = jax.lax.pmax(m, model_axis)
-        coef = jnp.exp(m - m_glob)
-        l_glob = jax.lax.psum(l * coef, model_axis)
-        acc_glob = jax.lax.psum(acc * coef[..., None], model_axis)
+        l_glob, acc_glob = _combine(m, l, acc, model_axis, msize, topology)
         return _finish(q, l_glob, acc_glob), kc, vc
 
     rep = P(bspec, None, None, None)
@@ -257,6 +349,7 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
                        mesh: jax.sharding.Mesh,
                        data_axes: Tuple[str, ...] = ("data",),
                        model_axis: str = "model",
+                       combine=None,
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step against a block-pool cache sharded on the *pool*
     dim (a paged cache has no contiguous seq dim to shard — the pool is
@@ -280,6 +373,10 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
       replica append only its own slots' rows and silently diverge.
     * ``"none"`` — the unsharded single-shard combine.
 
+    ``combine`` pins the model-axis softmax-combine topology (see
+    :func:`combine_topology`); it changes the wire pattern of the
+    combine, never its value.
+
     Semantics match :func:`repro.kernels.ref.paged_decode_attention_ref`
     over the appended pool with ``cache_len = pos + 1``.
     """
@@ -300,6 +397,8 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
 
     sizes = mesh_sizes(mesh)
     msize = sizes.get(model_axis, 1)
+    topology = combine_topology(mesh, model_axis=model_axis,
+                                override=combine)
     dnames = tuple(a for a in data_axes if a in sizes)
     if kind == "2d":
         bspec = dnames[0] if len(dnames) == 1 else dnames
@@ -324,10 +423,7 @@ def flash_decode_paged(q: jax.Array,       # (B, 1, H, D)
         vp = append_kv_paged(vp, vn, pos, tbl, start)
         m, l, acc = _partial_attend_paged(q, kp, vp, tbl, pos, window, start)
         if msize > 1:
-            m_glob = jax.lax.pmax(m, model_axis)
-            coef = jnp.exp(m - m_glob)
-            l = jax.lax.psum(l * coef, model_axis)
-            acc = jax.lax.psum(acc * coef[..., None], model_axis)
+            l, acc = _combine(m, l, acc, model_axis, msize, topology)
         return _finish(q, l, acc), kp, vp
 
     rep = P(bspec, None, None, None)

@@ -61,7 +61,8 @@ _DECISION_KEYS = ("strategy", "decode_impl", "kv_residency", "kv_block_len",
                   "kv_prefix_reuse", "kv_prefix_hit_headroom",
                   "kv_tier_split", "kv_host_blocks", "kv_prefetch",
                   "kv_prefill_mode", "kv_prefill_chunk",
-                  "moe_impl", "grad_compression")
+                  "moe_impl", "grad_compress", "grad_compress_lowered",
+                  "combine_topology")
 
 
 def _decisions(plan: FrozenPlan) -> dict:
@@ -72,7 +73,11 @@ def _decisions(plan: FrozenPlan) -> dict:
     them as ``hbm-only`` instead of dropping the field (or raising on a
     reader that assumes it exists).  Likewise plans from before the
     disaggregated-prefill split never recorded a ``kv_prefill_mode`` —
-    their prefills all ran in-process, so render ``inline``."""
+    their prefills all ran in-process, so render ``inline``.  Plans from
+    before the combine-topology split ran every shard_map decode combine
+    as flat psums — render ``flat``; compressed plans from before the
+    wire lowering only modeled the cut post-reduce — render
+    ``post-reduce``."""
     dec = {k: plan.estimates[k] for k in _DECISION_KEYS
            if k in plan.estimates}
     if dec.get("kv_residency") == "paged":
@@ -80,6 +85,11 @@ def _decisions(plan: FrozenPlan) -> dict:
             dec["kv_tier_split"] = "hbm-only"
         if "kv_prefill_mode" not in dec:
             dec["kv_prefill_mode"] = "inline"
+    if str(dec.get("decode_impl", "")).startswith("shard_map") \
+            and "combine_topology" not in dec:
+        dec["combine_topology"] = "flat"
+    if dec.get("grad_compress") and "grad_compress_lowered" not in dec:
+        dec["grad_compress_lowered"] = "post-reduce"
     return dec
 
 

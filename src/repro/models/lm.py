@@ -64,6 +64,7 @@ class RunCfg:
     remat: str = "none"            # none | dots | full
     moe_impl: str = "gshard_einsum"  # or shard_map_alltoall | dense_einsum
     decode_impl: str = "xla"       # or shard_map_flash (seq-sharded cache)
+    combine_topology: Optional[str] = None  # flat|ring|bidir; None -> predicate
     mesh: Optional[jax.sharding.Mesh] = None   # needed by shard_map path
     data_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
@@ -678,12 +679,14 @@ def decode_step(arch: ArchConfig, params, cache, batch, cfg: RunCfg):
                     from repro.dist.flash_decode import flash_decode_paged
                     ctx, kc, vc = flash_decode_paged(
                         q, k, v, kc, vc, block_tbl, pos, w, mesh=cfg.mesh,
-                        data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+                        data_axes=cfg.data_axes, model_axis=cfg.model_axis,
+                        combine=cfg.combine_topology)
                 else:
                     from repro.dist.flash_decode import flash_decode
                     ctx, kc, vc = flash_decode(
                         q, k, v, kc, vc, pos, w, mesh=cfg.mesh,
-                        data_axes=cfg.data_axes, model_axis=cfg.model_axis)
+                        data_axes=cfg.data_axes, model_axis=cfg.model_axis,
+                        combine=cfg.combine_topology)
             else:
                 if not cfg.shard_heads:
                     pass

@@ -516,6 +516,22 @@ class ServeEngine:
                 return "flash"
         return impl
 
+    @property
+    def combine_topology(self) -> str:
+        """The model-axis softmax-combine topology decode ticks run —
+        the same :func:`repro.dist.flash_decode.combine_topology`
+        predicate the kernels dispatch on, with the engine's RunCfg
+        override (a plan-recorded or caller-pinned topology) applied.
+        Paths with no cross-shard combine (xla / single-shard flash)
+        report "flat"."""
+        if self.decode_path not in ("shard_map_flash",
+                                    "shard_map_flash_paged_2d"):
+            return "flat"
+        from repro.dist.flash_decode import combine_topology
+        return combine_topology(self.cfg.mesh,
+                                model_axis=self.cfg.model_axis,
+                                override=self.cfg.combine_topology)
+
     # ---------------- disaggregated prefill ---------------------------
     @property
     def prefill_mode(self) -> str:
@@ -558,6 +574,7 @@ class ServeEngine:
                   kv_prefix_reuse: Optional[str] = None,
                   kv_host_blocks: Optional[int] = None,
                   kv_prefetch: Optional[str] = None,
+                  combine_topology: Optional[str] = None,
                   preemption: Optional[PreemptionPolicy] = None,
                   kv_prefill_mode: Optional[str] = None,
                   disagg_workers: int = 0,
@@ -622,6 +639,10 @@ class ServeEngine:
         cfg = build_run_cfg(plan, arch, mesh)
         if mesh is None and cfg.decode_impl != "xla":
             cfg = dataclasses.replace(cfg, decode_impl="xla")
+        if combine_topology is not None:
+            # ops escape hatch, same shape as kv_admission: pin the
+            # softmax-combine wire pattern over the plan's record
+            cfg = dataclasses.replace(cfg, combine_topology=combine_topology)
         if max_batch is None:
             max_batch = (plan.global_batch
                          if plan.shape_kind == "decode" and plan.global_batch
@@ -825,6 +846,7 @@ class ServeEngine:
         return {
             "tick": self.tick,
             "decode_path": self.decode_path,
+            "combine_topology": self.combine_topology,
             "kv_residency": self.kv_residency,
             "kv_admission": self.kv_admission,
             "prefill_mode": self.prefill_mode,

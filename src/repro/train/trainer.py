@@ -133,8 +133,11 @@ class Trainer:
                                     *_padded(self.plan))
             opt = adamw.init_opt_state(params, self.opt_cfg)
             if self.plan.comm.compresses_gradients:
+                from repro.core.passes.lowering import wire_compression
                 from repro.dist.collectives import ef_state
-                opt["ef"] = ef_state(params)
+                # lowered wire path keeps one residual per DP slice
+                dp = wire_compression(self.plan, self.mesh, self.arch)
+                opt["ef"] = ef_state(params, replicas=max(dp, 1))
             return {"params": params, "opt": opt}
 
         # one jit: fresh (non-aliased, donation-safe) buffers, born sharded

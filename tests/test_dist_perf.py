@@ -190,6 +190,87 @@ def test_communication_pass_compresses_when_collective_bound():
                for e in plan2.log)
 
 
+def test_communication_pass_records_lowered_wire():
+    """When compression is on AND the wire gate admits the step, the
+    plan records that the cut is lowered (int16 code sums on the wire),
+    not merely modeled — with the DP degree in the estimates, a
+    narrative decision-log entry, and the flag surviving the frozen
+    round-trip.  A compressed plan the gate rejects records the honest
+    post-reduce fallback instead."""
+    from repro.core.plan import FrozenPlan
+
+    shape = ShapeConfig("cb_low", "train", 128, 8)
+    plan = specialize("qwen3-8b", shape, mesh_axes=("data", "model"),
+                      mesh_shape=(8, 2))
+    assert plan.comm.compress_grads and plan.comm.compress_lowered
+    assert plan.estimates["grad_compress_lowered"] == 8.0   # the DP degree
+    recs = [(d, w) for _, s, d, w in plan.log
+            if s == "grad_compress_lowering"]
+    assert recs and "int16" in recs[-1][0] and "dp=8" in recs[-1][0]
+    assert "int16" in recs[-1][1]           # headroom narrative
+    rt = FrozenPlan.from_json(plan.to_json())
+    assert rt.comm.compress_lowered and rt == plan
+
+    # forced compression on a 1-wide data axis: nothing to reduce
+    # across, so the gate refuses and the record says post-reduce
+    plan2 = specialize("qwen3-8b", ShapeConfig("cb_pr", "train", 128, 8),
+                       mesh_axes=("data", "model"), mesh_shape=(1, 2),
+                       grad_compression="on")
+    assert plan2.comm.compress_grads and not plan2.comm.compress_lowered
+    assert "grad_compress_lowered" not in plan2.estimates
+    recs2 = [d for _, s, d, _ in plan2.log if s == "grad_compress_lowering"]
+    assert recs2 and recs2[-1] == "post-reduce EF"
+
+
+def test_communication_pass_chooses_and_records_combine_topology():
+    """Decode plans choose a model-axis combine topology per mesh
+    geometry (calibrated thresholds: flat <= 8 < ring <= 16 < bidir),
+    record it with its hop count and a hop-comparison narrative, honor
+    the specialize() override, and carry it through the frozen
+    artifact — the same choose-and-record shape as kv_residency."""
+    from repro.core.plan import FrozenPlan
+
+    dec = ShapeConfig("ct_dec", "decode", 256, 8)
+    plan = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 8))
+    assert plan.comm.combine_topology == "flat"
+    assert plan.estimates["combine_topology"] == "flat"
+    assert plan.estimates["combine_hops"] == 42.0     # 6 * (8 - 1)
+    recs = [(d, w) for _, s, d, w in plan.log if s == "combine_topology"]
+    assert recs and recs[-1][0] == "flat"
+    rt = FrozenPlan.from_json(plan.to_json())
+    assert rt.comm.combine_topology == "flat" and rt == plan
+
+    # wider modeled meshes cross the thresholds (no host devices
+    # needed: the pass works on the modeled mesh geometry)
+    ring = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 16))
+    assert ring.estimates["combine_topology"] == "ring"
+    assert ring.estimates["combine_hops"] == 15.0
+    why = [w for _, s, _, w in ring.log if s == "combine_topology"][-1]
+    assert "hop" in why
+    bidir = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                       mesh_shape=(1, 32))
+    assert bidir.estimates["combine_topology"] == "bidir"
+    assert bidir.estimates["combine_hops"] == 16.0    # ceil(31 / 2)
+
+    # the override is the ops escape hatch, recorded as forced
+    forced = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                        mesh_shape=(1, 8), combine_topology="ring")
+    assert forced.comm.combine_topology == "ring"
+    whyf = [w for _, s, _, w in forced.log if s == "combine_topology"][-1]
+    assert "forced by options" in whyf
+
+    # a degenerate model axis records flat: no cross-shard combine
+    one = specialize("qwen3-8b", ShapeConfig("ct_one", "decode", 256, 8),
+                     mesh_axes=("data", "model"), mesh_shape=(1, 1))
+    assert one.estimates["combine_topology"] == "flat"
+    assert one.estimates["combine_hops"] == 0.0
+    # train plans have no decode combine to choose
+    assert "combine_topology" not in \
+        specialize("qwen3-8b", "train_4k").estimates
+
+
 # ---------------- causal grid pruning ----------------
 
 def test_causal_grid_steps_halved_at_4k():

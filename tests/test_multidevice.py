@@ -587,6 +587,182 @@ def test_compressed_psum_multi_shard():
     """)
 
 
+def test_combine_topology_matrix_ring_bidir_vs_flat():
+    """The combine-topology oracle matrix: ring and bidirectional-ring
+    softmax combines pinned against the flat-psum combine and the gather
+    oracle across model degrees {2, 4, 8} for the dense seq-sharded
+    kernel, the 1-D pool-sharded paged kernel, and the 2-D paged
+    placement.
+
+    Contracts (measured, not aspirational): ring == bidir BITWISE (both
+    fold the same source-indexed gathered buffer in the same sequential
+    order — the two ppermute arms only change how the buffer fills);
+    ring vs flat agree to the last ulp (flat's psum is fused with the
+    exp/mul rescale by XLA and re-rounds differently — 1-ulp class, not
+    a reduction-order class, so a loose 1e-6); and every topology
+    matches the unsharded gather oracle within the 1e-5 bound every
+    other decode test in this file pins."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.flash_decode import (combine_topology, flash_decode,
+                                             flash_decode_paged)
+        from repro.kernels import ref
+
+        TOPOS = ("flat", "ring", "bidir")
+
+        def check(outs, oracle, tag):
+            assert np.array_equal(outs["ring"], outs["bidir"]), tag
+            d = np.abs(outs["ring"] - outs["flat"]).max()
+            assert d < 1e-6, (tag, d)
+            for t in TOPOS:
+                e = np.abs(outs[t] - np.asarray(oracle)).max()
+                assert e < 1e-5, (tag, t, e)
+
+        # predicate: 8 host devices cap the natural degree at 8, all
+        # flat; overrides force the wire pattern; a degenerate model
+        # axis has no cross-shard combine so even an override is flat
+        for dsz, msz in ((4, 2), (2, 4), (1, 8)):
+            m = jax.make_mesh((dsz, msz), ("data", "model"))
+            assert combine_topology(m) == "flat"
+            assert combine_topology(m, override="ring") == "ring"
+            assert combine_topology(m, override="bidir") == "bidir"
+        m1 = jax.make_mesh((8, 1), ("data", "model"))
+        assert combine_topology(m1) == "flat"
+        assert combine_topology(m1, override="bidir") == "flat"
+        try:
+            combine_topology(jax.make_mesh((1, 8), ("data", "model")),
+                             override="hypercube")
+            raise SystemExit("expected ValueError on unknown topology")
+        except ValueError:
+            pass
+
+        # dense seq-sharded kernel across model degrees 2/4/8
+        B, S, H, K, D = 4, 64, 8, 4, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, D))
+        kn = jax.random.normal(ks[1], (B, 1, K, D))
+        vn = jax.random.normal(ks[2], (B, 1, K, D))
+        kc = jax.random.normal(ks[3], (B, S, K, D))
+        vc = jax.random.normal(ks[4], (B, S, K, D))
+        pos = jnp.asarray([10, 40, 63, 5], jnp.int32)
+        kr = ref.decode_append_ref(kc, kn, pos)
+        vr = ref.decode_append_ref(vc, vn, pos)
+        r = ref.decode_attention_ref(q[:, 0], kr, vr,
+                                     cache_len=pos + 1, window=0)
+        for dsz, msz in ((4, 2), (2, 4), (1, 8)):
+            mesh = jax.make_mesh((dsz, msz), ("data", "model"))
+            outs = {}
+            for t in TOPOS:
+                ctx, _, _ = jax.jit(lambda *a, t=t: flash_decode(
+                    *a, mesh=mesh, combine=t))(q, kn, vn, kc, vc, pos, 0)
+                outs[t] = np.asarray(ctx[:, 0])
+            check(outs, r, ("dense", msz))
+
+        # 1-D pool-sharded paged kernel across model degrees 2/4/8
+        # (B=3 keeps the batch unpartitionable over data>1, pinning the
+        # replicated-pool 1-D combine)
+        Bp, bl, N = 3, 8, 16
+        kp = jax.random.normal(jax.random.split(ks[3])[0], (N, bl, K, D))
+        vp = jax.random.normal(jax.random.split(ks[4])[0], (N, bl, K, D))
+        tbl = jnp.asarray([[0, 9, 3, -1], [14, 2, -1, -1],
+                           [5, 7, 11, 13]], jnp.int32)
+        ppos = jnp.asarray([16, 8, 31], jnp.int32)
+        kpr = ref.paged_append_ref(kp, kn[:Bp], ppos, tbl)
+        vpr = ref.paged_append_ref(vp, vn[:Bp], ppos, tbl)
+        pr = ref.paged_decode_attention_ref(
+            q[:Bp, 0], kpr, vpr, tbl, cache_len=ppos + 1, window=0)
+        for dsz, msz in ((4, 2), (2, 4), (1, 8)):
+            mesh = jax.make_mesh((dsz, msz), ("data", "model"))
+            outs = {}
+            for t in TOPOS:
+                ctx, _, _ = jax.jit(lambda *a, t=t: flash_decode_paged(
+                    *a, mesh=mesh, combine=t))(
+                        q[:Bp], kn[:Bp], vn[:Bp], kp, vp, tbl, ppos, 0)
+                outs[t] = np.asarray(ctx[:, 0])
+            check(outs, pr, ("paged-1d", msz))
+
+        # 2-D placement (batch-partitioned sub-pools, model degree 4):
+        # the combine override must plumb through the 2-D combine too
+        from repro.dist.flash_decode import pool_sharding_kind
+        mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+        t2 = jnp.asarray([[0, 5, 3, -1], [7, 2, -1, -1],
+                          [8, 15, 11, 13], [9, 14, -1, -1]], jnp.int32)
+        p2 = jnp.asarray([16, 8, 31, 10], jnp.int32)
+        assert pool_sharding_kind(mesh2, N, B) == "2d"
+        k2r = ref.paged_append_ref(kp, kn, p2, t2)
+        v2r = ref.paged_append_ref(vp, vn, p2, t2)
+        r2 = ref.paged_decode_attention_ref(
+            q[:, 0], k2r, v2r, t2, cache_len=p2 + 1, window=0)
+        outs = {}
+        for t in TOPOS:
+            ctx, _, _ = jax.jit(lambda *a, t=t: flash_decode_paged(
+                *a, mesh=mesh2, combine=t))(q, kn, vn, kp, vp, t2, p2, 0)
+            outs[t] = np.asarray(ctx[:, 0])
+        check(outs, r2, ("paged-2d", 4))
+        print("OK")
+    """, timeout=600)
+
+
+def test_serve_from_plan_ring_combine_end_to_end():
+    """A plan-recorded ring combine served end-to-end: specialize() with
+    the ``combine_topology="ring"`` override records the decision (8
+    host devices cannot exceed the flat<=8 threshold naturally), the
+    RunCfg carries it through ``from_plan`` without any engine-side
+    kwarg, the engine reports it in telemetry, and a staggered
+    continuous batch through the ring combine is token-identical to
+    sequential single-request serving through the same path."""
+    run_subprocess("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import ShapeConfig, get_arch
+        from repro.core.pipeline import specialize
+        from repro.models import lm
+        from repro.serve.engine import ServeEngine
+
+        arch = dataclasses.replace(get_arch("qwen3-8b").reduced(),
+                                   n_kv_heads=1)
+        shape = ShapeConfig("serve_ring", "decode", 32, 2)
+        plan = specialize(arch, shape, mesh_axes=("data", "model"),
+                          mesh_shape=(1, 8), cache=False,
+                          kv_residency="dense", combine_topology="ring")
+        assert plan.estimates.get("decode_impl") == "shard_map_flash"
+        assert plan.estimates["combine_topology"] == "ring"
+        assert plan.comm.combine_topology == "ring"
+        # the decision log narrates the override, not a modeled choice
+        recs = [(d, w) for _, s, d, w in plan.log
+                if s == "combine_topology"]
+        assert recs and recs[-1][0] == "ring" \\
+            and "forced by options" in recs[-1][1], recs
+
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        params = lm.init_params(arch, jax.random.PRNGKey(0),
+                                *plan.padded_sizes())
+        eng = ServeEngine.from_plan(plan, params, arch=arch, mesh=mesh)
+        assert eng.decode_path == "shard_map_flash", eng.decode_path
+        assert eng.combine_topology == "ring", eng.combine_topology
+        assert eng.telemetry()["combine_topology"] == "ring"
+
+        prompts = [np.arange(5, dtype=np.int32) % arch.vocab_size,
+                   (np.arange(11, dtype=np.int32) * 3) % arch.vocab_size,
+                   (np.arange(8, dtype=np.int32) * 7) % arch.vocab_size]
+        eng.submit(prompts[0], max_new_tokens=5)
+        eng.step()
+        for p in prompts[1:]:
+            eng.submit(p, max_new_tokens=5)
+        done = eng.run_until_idle(max_ticks=64)
+        assert len(done) == 3 and all(len(r.out_tokens) == 5 for r in done)
+        a = {r.prompt.tobytes(): r.out_tokens for r in done}
+        for p in prompts:
+            eng2 = ServeEngine.from_plan(plan, params, arch=arch,
+                                         mesh=mesh, max_batch=1)
+            assert eng2.combine_topology == "ring"
+            eng2.submit(p, max_new_tokens=5)
+            done2 = eng2.run_until_idle(max_ticks=32)
+            assert a[p.tobytes()] == done2[0].out_tokens, (
+                p, a[p.tobytes()], done2[0].out_tokens)
+        print("OK")
+    """, timeout=600)
+
+
 def test_train_step_fsdp_dp_multidevice():
     """The fsdp_dp lowered train step executes on a real (2,4) mesh."""
     run_subprocess("""

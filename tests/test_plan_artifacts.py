@@ -307,6 +307,81 @@ def test_trainer_stamps_hash_and_warm_starts(tmp_path, capsys):
     assert "plan hash changed" in capsys.readouterr().out
 
 
+def test_comm_plan_wire_fields_roundtrip_and_render(capsys, tmp_path):
+    """The two new CommPlan fields (``compress_lowered``,
+    ``combine_topology``) survive freeze -> json -> thaw -> refreeze
+    losslessly, `plan show` renders them, and `plan diff` narrates a
+    topology flip between two otherwise-identical decode artifacts."""
+    from repro.launch.plan import main
+
+    d = str(tmp_path / "plans")
+    dec = ShapeConfig("wire_dec", "decode", 256, 8)
+    flat = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 8), plan_dir=d)
+    ring = specialize("qwen3-8b", dec, mesh_axes=("data", "model"),
+                      mesh_shape=(1, 8), plan_dir=d,
+                      combine_topology="ring")
+    assert flat.comm.combine_topology == "flat"
+    assert ring.comm.combine_topology == "ring"
+    assert flat.content_hash() != ring.content_hash()
+    for p in (flat, ring):
+        rt = FrozenPlan.from_json(p.to_json())
+        assert rt == p and rt.content_hash() == p.content_hash()
+        assert rt.thaw().freeze().comm.combine_topology \
+            == p.comm.combine_topology
+
+    assert main(["--plan-dir", d, "show", ring.content_hash()[:10]]) == 0
+    out = capsys.readouterr().out
+    assert '"combine_topology": "ring"' in out
+    rc = main(["--plan-dir", d, "diff", flat.content_hash()[:10],
+               ring.content_hash()[:10]])
+    out = capsys.readouterr().out
+    assert rc == 1 and "combine_topology" in out
+
+    # the lowered-compression flag rides the same round-trip
+    low = specialize("qwen3-8b", ShapeConfig("wire_tr", "train", 128, 8),
+                     mesh_axes=("data", "model"), mesh_shape=(8, 2),
+                     plan_dir=d)
+    assert low.comm.compress_lowered
+    assert FrozenPlan.from_json(low.to_json()).comm.compress_lowered
+    assert main(["--plan-dir", d, "show", low.content_hash()[:10]]) == 0
+    out = capsys.readouterr().out
+    assert '"grad_compress_lowered": 8.0' in out and "+int8_ef" in out
+
+
+def test_plan_cli_renders_wire_decisions_schema_tolerant():
+    """Artifacts stored before the topology/lowering split still
+    render: a shard_map decode artifact without ``combine_topology``
+    displays the flat combine it actually ran, a compressed artifact
+    without ``grad_compress_lowered`` displays the post-reduce EF it
+    actually ran, and plans with neither key synthesize nothing."""
+    from types import SimpleNamespace
+
+    from repro.launch.plan import _DECISION_KEYS, _decisions
+
+    assert "combine_topology" in _DECISION_KEYS
+    assert "grad_compress_lowered" in _DECISION_KEYS
+    old_dec = _decisions(SimpleNamespace(
+        estimates={"decode_impl": "shard_map_flash",
+                   "kv_residency": "dense"}))
+    assert old_dec["combine_topology"] == "flat"
+    old_cmp = _decisions(SimpleNamespace(estimates={"grad_compress": 1.0}))
+    assert old_cmp["grad_compress_lowered"] == "post-reduce"
+    # xla-decode and uncompressed artifacts synthesize neither field
+    plain = _decisions(SimpleNamespace(
+        estimates={"decode_impl": "xla", "grad_compress": 0.0}))
+    assert "combine_topology" not in plain
+    assert "grad_compress_lowered" not in plain
+    # present keys always win over the fallbacks
+    new = _decisions(SimpleNamespace(
+        estimates={"decode_impl": "shard_map_flash",
+                   "combine_topology": "bidir",
+                   "grad_compress": 1.0,
+                   "grad_compress_lowered": 8.0}))
+    assert new["combine_topology"] == "bidir"
+    assert new["grad_compress_lowered"] == 8.0
+
+
 def test_diff_decision_logs():
     old = [("layout", "vocab", "pad_512", "mxu"),
            ("comm", "grads", "reduce_scatter", "bw")]

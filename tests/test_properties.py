@@ -511,6 +511,151 @@ def test_kv_block_geometry_2d_invariants(seed):
 
 
 # =====================================================================
+# wire-compression round-trip fuzz (the lowered train step's reduction
+# primitive) + combine-topology dispatch invariants — seeded random,
+# always runs
+# =====================================================================
+
+#: (r, shape): stacked-slice degrees x leaf shapes, covering last dims
+#: below / at / straddling the 128-element quantization block, a
+#: 1-element last dim, and a multi-axis leaf
+SLICE_SHAPES = [(1, (5,)), (2, (1,)), (2, (127,)), (3, (128,)),
+                (4, (129,)), (8, (300,)), (2, (3, 70)), (4, (2, 2, 40))]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_compressed_slice_sum_roundtrip_invariants(seed):
+    """The contracts the lowered wire step leans on, fuzzed over shapes
+    and scales: shape/dtype preservation, the telescoping identity
+    ``mean + mean_i(err_i) == mean_i(x_i)`` (exact up to f32 rounding),
+    the per-block error bound ``|err| <= amax_block / 254`` with the
+    scale shared across slices, and the degenerates — an all-zero
+    stack round-trips to exact zeros, and a single slice (r=1)
+    reconstructs exactly via its own residual."""
+    from repro.dist.collectives import BLOCK, compressed_slice_sum
+    rng = np.random.default_rng(seed)
+    for r, shape in SLICE_SHAPES:
+        x = (rng.standard_normal((r,) + shape)
+             * 10.0 ** rng.integers(-3, 3)).astype(np.float32)
+        mean, err = compressed_slice_sum(jnp.asarray(x))
+        assert mean.shape == shape and mean.dtype == jnp.float32
+        assert err.shape == x.shape and err.dtype == jnp.float32
+        m, e = np.asarray(mean), np.asarray(err)
+        # telescoping identity, per element
+        scale = max(np.abs(x).max(), 1.0)
+        assert np.abs((m + e.mean(0)) - x.mean(0)).max() < 1e-6 * scale
+        # per-block bound with the SHARED scale: amax over all slices
+        d = x.shape[-1]
+        pad = (-d) % BLOCK
+        xp = np.concatenate(
+            [x, np.zeros(x.shape[:-1] + (pad,), np.float32)], -1)
+        blocks = xp.reshape(x.shape[:-1] + (-1, BLOCK))
+        amax = np.abs(blocks).max(axis=-1).max(axis=0)   # shared over r
+        ep = np.concatenate(
+            [e, np.zeros(x.shape[:-1] + (pad,), np.float32)], -1)
+        eb = np.abs(ep.reshape(x.shape[:-1] + (-1, BLOCK))).max(axis=-1)
+        assert (eb <= amax[None] / 254.0 * 1.001 + 1e-9).all()
+        if r == 1:
+            # one slice: mean + err IS the input, exactly
+            assert np.array_equal(m + e[0], x[0])
+    # all-zero stack: codes are zero, scale floor never injects noise
+    mean, err = compressed_slice_sum(jnp.zeros((4, 200), jnp.float32))
+    assert not np.asarray(mean).any() and not np.asarray(err).any()
+
+
+def test_compressed_slice_sum_matches_compressed_psum_degenerate():
+    """r=1 slice sum == a 1-shard compressed_psum: the GSPMD twin and
+    the shard_map primitive share one quantization recipe (a drift
+    between them would silently change the wire semantics when the
+    lowering gate flips between the two paths)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import compressed_psum, compressed_slice_sum
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((3, 200)),
+                    jnp.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    y1, e1 = jax.jit(jax.shard_map(
+        lambda v: compressed_psum(v, "data"), mesh=mesh,
+        in_specs=P(), out_specs=(P(), P())))(x)
+    # jit both: op-by-op dequant rounds differently from the fused form
+    y2, e2 = jax.jit(compressed_slice_sum)(x[None])
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    assert np.array_equal(np.asarray(e1), np.asarray(e2[0]))
+
+
+def test_combine_topology_choice_is_a_total_order():
+    """The calibrated thresholds induce a monotone map from model
+    degree to topology rank (flat < ring < bidir): once the degree is
+    large enough to leave a topology behind, no larger degree ever
+    returns to it — the property that makes the plan decision stable
+    under mesh growth."""
+    from repro.core.costmodel import (COMBINE_BIDIR_DEGREE,
+                                      COMBINE_RING_DEGREE,
+                                      COMBINE_TOPOLOGIES,
+                                      COMBINE_TOPOLOGY_RANK, combine_hops,
+                                      choose_combine_topology)
+    prev = 0
+    for n in range(1, 65):
+        topo = choose_combine_topology(n)
+        assert topo in COMBINE_TOPOLOGIES
+        rank = COMBINE_TOPOLOGY_RANK[topo]
+        assert rank >= prev, (n, topo)
+        prev = rank
+    # the calibrated boundaries themselves
+    assert choose_combine_topology(COMBINE_RING_DEGREE) == "flat"
+    assert choose_combine_topology(COMBINE_RING_DEGREE + 1) == "ring"
+    assert choose_combine_topology(COMBINE_BIDIR_DEGREE) == "ring"
+    assert choose_combine_topology(COMBINE_BIDIR_DEGREE + 1) == "bidir"
+    # hop counts: the latency-model ordering behind the thresholds
+    for n in range(2, 65):
+        assert combine_hops(n, "flat") == 6 * (n - 1)
+        assert combine_hops(n, "ring") == n - 1
+        assert combine_hops(n, "bidir") == (n - 1 + 1) // 2
+        assert combine_hops(n, "bidir") <= combine_hops(n, "ring") \
+            < combine_hops(n, "flat")
+    for t in ("flat", "ring", "bidir"):
+        assert combine_hops(1, t) == 0    # no cross-shard combine exists
+    with pytest.raises(ValueError, match="topology"):
+        combine_hops(4, "hypercube")
+
+
+def test_combine_topology_dispatch_agreement_single_process():
+    """Kernel predicate and engine agree off-mesh: a degenerate model
+    axis reports "flat" regardless of the override (no combine exists
+    to re-route), and a single-process engine — whose decode path is
+    not shard_map — reports "flat" in telemetry even when its RunCfg
+    pins "ring" (the plan override only binds where the sharded combine
+    actually runs)."""
+    import jax
+    from repro.configs import get_arch
+    from repro.dist.flash_decode import combine_topology
+    from repro.models import lm
+    from repro.models.lm import RunCfg
+    from repro.serve.engine import ServeEngine
+
+    mesh1 = jax.make_mesh((1,), ("model",))
+    assert combine_topology(mesh1) == "flat"
+    assert combine_topology(mesh1, override="bidir") == "flat"
+    # the degenerate short-circuit wins even over a bogus override: no
+    # combine exists to mis-route (the ValueError on real model axes is
+    # pinned by the 8-device matrix test in test_multidevice)
+    assert combine_topology(mesh1, override="hypercube") == "flat"
+    # a mesh without the model axis at all is the same degenerate case
+    assert combine_topology(jax.make_mesh((1,), ("data",))) == "flat"
+
+    arch = get_arch("qwen3-8b").reduced()
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params,
+                      RunCfg(block_q=16, ssd_chunk=16,
+                             combine_topology="ring"),
+                      max_batch=1, max_len=32)
+    assert eng.decode_path not in ("shard_map_flash",
+                                   "shard_map_flash_paged_2d")
+    assert eng.combine_topology == "flat"
+    assert eng.telemetry()["combine_topology"] == "flat"
+
+
+# =====================================================================
 # hypothesis tier (skipped cleanly when hypothesis is unavailable)
 # =====================================================================
 
@@ -563,6 +708,23 @@ if HAVE_HYPOTHESIS:
             err.astype(jnp.float32)))
         scale = max(abs(total_in), 1.0)
         assert abs(total_in - total_out) / scale < 0.02
+
+    @given(st.integers(1, 6),
+           st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                    min_size=1, max_size=512))
+    @settings(max_examples=50, deadline=None)
+    def test_compressed_slice_sum_telescopes_hypothesis(r, vals):
+        """Hypothesis twin of the seeded round-trip fuzz: the
+        telescoping identity holds for every stack degree and leaf the
+        wire step could see."""
+        from repro.dist.collectives import compressed_slice_sum
+        base = np.asarray(vals, np.float32)
+        x = jnp.asarray(np.stack([np.roll(base, i) for i in range(r)]))
+        mean, err = compressed_slice_sum(x)
+        lhs = np.asarray(mean) + np.asarray(err).mean(0)
+        rhs = np.asarray(x).mean(0)
+        scale = max(float(np.abs(base).max()), 1.0)
+        assert np.abs(lhs - rhs).max() < 1e-6 * scale
 
     @given(st.integers(1, 100_000), st.integers(2, 64))
     @settings(max_examples=100, deadline=None)
